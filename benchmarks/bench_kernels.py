@@ -1,0 +1,97 @@
+"""Kernel micro-benchmarks: pairwise/gather distance — ref (XLA) timing on
+CPU + interpret-mode correctness spot check.  On real TPU the pallas path
+would be timed instead; here the CSV records the ref-backend throughput the
+ANN engine actually uses plus the kernels' validated block configs."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.pairwise_dist import pairwise_dist
+
+from .common import emit
+
+
+def _time(fn, *args, iters=20):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def kernel_pairwise() -> None:
+    for m, n, d in [(128, 1024, 128), (256, 4096, 128), (64, 2048, 960)]:
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, d))
+        y = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+        f = jax.jit(ref.pairwise_sq_l2)
+        dt = _time(f, x, y)
+        flops = 2 * m * n * d
+        emit(f"kernel_pairwise_ref/{m}x{n}x{d}", dt * 1e6,
+             f"{flops / dt / 1e9:.1f} GFLOP/s")
+        # interpret-mode kernel correctness at this exact shape
+        got = pairwise_dist(x, y, interpret=True)
+        err = float(jnp.max(jnp.abs(got - f(x, y))))
+        emit(f"kernel_pairwise_interp_maxerr/{m}x{n}x{d}", 0.0, f"{err:.2e}")
+
+
+def kernel_gather() -> None:
+    for b, k, n, d in [(16, 64, 20_000, 128), (4, 128, 20_000, 960)]:
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, d))
+        v = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+        idx = jax.random.randint(jax.random.PRNGKey(2), (b, k), 0, n,
+                                 dtype=jnp.int32)
+        f = jax.jit(ref.gather_sq_l2)
+        dt = _time(f, q, v, idx)
+        emit(f"kernel_gather_ref/{b}x{k}@{n}x{d}", dt * 1e6,
+             f"{b * k / dt / 1e6:.2f} Mdist/s")
+
+
+def beam_search_micro() -> None:
+    from repro.core.search import batch_beam_search
+    rng = np.random.default_rng(0)
+    n, d, deg = 20_000, 128, 24
+    vecs = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    nbrs = jnp.asarray(rng.integers(0, n, size=(n, deg)).astype(np.int32))
+    qs = jnp.asarray(rng.normal(size=(32, d)).astype(np.float32))
+    entry = jnp.asarray([0], jnp.int32)
+
+    def run(q):
+        return batch_beam_search(vecs, nbrs, q, entry, L=96, W=4)
+
+    res = run(qs)
+    jax.block_until_ready(res.ids)
+    t0 = time.perf_counter()
+    res = run(qs)
+    jax.block_until_ready(res.ids)
+    dt = time.perf_counter() - t0
+    emit("beam_search_batch32/L96", dt / 32 * 1e6,
+         f"{32 / dt:.1f} queries/s, hops={float(np.mean(np.asarray(res.n_hops))):.1f}")
+
+
+def pq_tradeoff() -> None:
+    """PQ (IVFADC) compression vs ADC top-10 recall — the in-RAM compressed
+    vectors FreshDiskANN-family systems use for update-phase distances."""
+    from repro.core import ProductQuantizer, brute_force_knn
+    from repro.data import synthetic_vectors
+    vecs = synthetic_vectors(4000, 128, n_clusters=32, seed=5)
+    for m in (8, 16, 32):
+        pq = ProductQuantizer.fit(vecs, m=m, k=128, iters=10)
+        codes = pq.encode(vecs)
+        rng = np.random.default_rng(0)
+        hits = []
+        for qi in rng.choice(4000, 20, replace=False):
+            q = vecs[qi] + 0.01 * rng.normal(size=128).astype(np.float32)
+            exact = set(brute_force_knn(vecs, q[None], 10)[0].tolist())
+            approx = set(np.argsort(pq.adc(q, codes))[:10].tolist())
+            hits.append(len(exact & approx) / 10)
+        emit(f"pq_tradeoff/m={m}", 0.0,
+             f"compression={512 // m}x adc_recall@10={np.mean(hits):.3f}")
+
+
+ALL = [kernel_pairwise, kernel_gather, beam_search_micro, pq_tradeoff]

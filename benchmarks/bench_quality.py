@@ -1,0 +1,91 @@
+"""Paper Figs. 11-13: search accuracy across update batches, tail latency,
+batch-size sensitivity."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import brute_force_knn
+
+from .bench_update import run_all_systems
+from .common import BENCH_DATASETS, SYSTEMS, build_base_once, emit
+
+
+def _live_eval(eng, vecs, live_ids, dim, k=10, n_q=50, seed=9):
+    """Ground truth against the vectors the index actually stores (insert
+    ids can outrun the generator's id->vector mapping once the reserve pool
+    cycles)."""
+    rng = np.random.default_rng(seed)
+    idx = eng.index
+    ids = np.fromiter(live_ids, np.int64)
+    slots = np.array([idx.slot_of(int(v)) for v in ids])
+    ok = slots >= 0
+    ids, slots = ids[ok], slots[ok]
+    live_vecs = idx.vectors[slots]
+    qsel = rng.choice(len(ids), n_q, replace=False)
+    queries = live_vecs[qsel] + 0.01 * rng.normal(
+        size=(n_q, dim)).astype(np.float32)
+    gt = ids[brute_force_knn(live_vecs, queries, k)]
+    got = eng.search(queries, k=k, L=96)
+    return float(np.mean([len(set(got[i]) & set(gt[i])) / k
+                          for i in range(n_q)]))
+
+
+def _live_set(dataset, stats_engines):
+    info = build_base_once(dataset)
+    n = len(info["base"])
+    live = set(range(n))
+    # reconstruct the live set from the engine's index (authoritative)
+    return info, live
+
+
+def fig11_recall() -> None:
+    for ds in BENCH_DATASETS:
+        res = run_all_systems(ds)
+        info = build_base_once(ds)
+        vecs = info["vectors"]
+        for system in SYSTEMS:
+            eng = res[system]["engine"]
+            live_ids = list(eng.index._local_map.keys())
+            rec = _live_eval(eng, vecs, live_ids, info["dim"])
+            emit(f"fig11_recall/{ds}/{system}", 0.0, f"recall@10={rec:.3f}")
+
+
+def fig12_tail_latency() -> None:
+    ds = BENCH_DATASETS[-1]          # highest-dim configured (msmarc analog)
+    res = run_all_systems(ds)
+    info = build_base_once(ds)
+    rng = np.random.default_rng(3)
+    for system in SYSTEMS:
+        eng = res[system]["engine"]
+        eng.search_stats.latencies_s.clear()
+        live_ids = np.fromiter(eng.index._local_map.keys(), np.int64)
+        for _ in range(8):   # several small batches for a latency sample
+            qs = info["vectors"][rng.choice(live_ids, 25)] + 0.01 * \
+                rng.normal(size=(25, info["dim"])).astype(np.float32)
+            eng.search(qs, k=10, L=96)
+        st = eng.search_stats
+        emit(f"fig12_latency/{ds}/{system}", st.percentile(50) * 1e6,
+             f"p90={st.percentile(90)*1e3:.2f}ms "
+             f"p95={st.percentile(95)*1e3:.2f}ms "
+             f"p99={st.percentile(99)*1e3:.2f}ms "
+             f"p999={st.percentile(99.9)*1e3:.2f}ms")
+
+
+def fig13_batch_size_sweep() -> None:
+    ds = BENCH_DATASETS[0]
+    info = build_base_once(ds)
+    vecs = info["vectors"]
+    for frac in (0.001, 0.004, 0.016):
+        res = run_all_systems(ds, batch_frac=frac, n_batches=3)
+        for system in SYSTEMS:
+            st = res[system]["stats"]
+            ops = sum(s.n_deletes + s.n_inserts for s in st)
+            secs = sum(s.total_s for s in st)
+            eng = res[system]["engine"]
+            live_ids = list(eng.index._local_map.keys())
+            rec = _live_eval(eng, vecs, live_ids, info["dim"], n_q=30)
+            emit(f"fig13_batchsize/{ds}/{system}/frac={frac}", 0.0,
+                 f"throughput={ops/secs:.1f}/s recall={rec:.3f}")
+
+
+ALL = [fig11_recall, fig12_tail_latency, fig13_batch_size_sweep]

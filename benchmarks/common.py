@@ -1,0 +1,77 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark reproduces one paper table/figure on synthetic datasets
+whose dimensionality mirrors Table 1 (offline container; see
+data/vectors.py for why low intrinsic dimension matters).  Scale is reduced
+from 1M to BENCH_N vectors — the comparisons are ratio-based and the I/O
+model is page-exact, so the paper's *relative* claims are testable at this
+scale; absolute updates/sec differ from the paper's Xeon testbed.
+
+`build_base_once` caches one Vamana build per (dataset, size) so the three
+systems update clones of an identical index (paper Sec. 7.2 protocol).
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import numpy as np
+
+from repro.core import IOSimulator, StreamingEngine, build_vamana
+from repro.core.index import IndexParams
+from repro.core.update import EngineConfig
+from repro.data import DATASET_DIMS, streaming_workload, synthetic_vectors
+
+BENCH_N = int(os.environ.get("BENCH_N", 12_000))
+BENCH_DATASETS = os.environ.get("BENCH_DATASETS",
+                                "sift1m,deep,gist").split(",")
+R, R_RELAXED = 24, 25
+L_BUILD, MAX_C = 48, 80
+SYSTEMS = ("freshdiskann", "ipdiskann", "greator")
+
+
+@functools.lru_cache(maxsize=None)
+def build_base_once(dataset: str, n: int = BENCH_N, seed: int = 0):
+    dim = DATASET_DIMS[dataset]
+    vecs = synthetic_vectors(n + max(n // 50, 200), dim, seed=seed)
+    base = vecs[:n]
+    params = IndexParams(dim=dim, R=R, R_relaxed=R_RELAXED)
+    t0 = time.perf_counter()
+    idx = build_vamana(base, params=params, L_build=L_BUILD, max_c=MAX_C,
+                       seed=seed)
+    return {"vectors": vecs, "base": base, "index": idx,
+            "build_s": time.perf_counter() - t0, "dim": dim}
+
+
+def fresh_engine(dataset: str, system: str, *, batch_size=10**9,
+                 cfg: EngineConfig | None = None) -> StreamingEngine:
+    info = build_base_once(dataset)
+    idx = info["index"].clone(io=IOSimulator())
+    return StreamingEngine(idx, engine=system, cfg=cfg,
+                           batch_size=batch_size)
+
+
+def workload(dataset: str, *, batch_frac=0.001, n_batches=5, seed=1):
+    info = build_base_once(dataset)
+    vecs = info["vectors"]
+    n = len(info["base"])
+    _, _, batches = streaming_workload(
+        len(vecs), info["dim"], batch_frac=batch_frac, n_batches=n_batches,
+        vectors=vecs, base_frac=n / len(vecs), seed=seed)
+    return list(batches)
+
+
+def run_batches(eng: StreamingEngine, batches):
+    stats = []
+    for b in batches:
+        for vid, v in b.insert_items:
+            eng.insert(v, vid)
+        for vid in b.delete_ids:
+            eng.delete(vid)
+        stats.append(eng.flush())
+    return stats
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

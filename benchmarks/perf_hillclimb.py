@@ -1,0 +1,59 @@
+"""Reproduce the EXPERIMENTS.md §Perf hillclimb measurements.
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb [A|B|C]
+
+Each entry re-lowers the cell with the baseline and the optimized
+configuration and prints the roofline-term deltas.  NOT part of
+benchmarks.run (each cell compile takes 30-120 s); run on demand.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def run() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "ABC"
+    # dryrun must own process startup (512 host devices)
+    from repro.launch import dryrun
+
+    def show(tag, rec):
+        if not rec["ok"]:
+            print(f"{tag}: FAIL {rec['error'][:120]}")
+            return
+        ro = rec["roofline"]
+        print(f"{tag:34s} compute={ro['compute_ms']:9.1f}ms "
+              f"memory={ro['memory_ms']:7.2f}ms "
+              f"collective={ro['collective_ms']:9.1f}ms "
+              f"hbm={rec['memory']['hbm_frac']:5.2f}")
+
+    if "A" in which:
+        print("== A: qwen3-moe-235b x train_4k x 16x16 ==")
+        show("A.base (paper-faithful)",
+             dryrun.run_cell("qwen3_moe_235b", "train_4k", False))
+        show("A1 +q8 weight gathers",
+             dryrun.run_cell("qwen3_moe_235b", "train_4k", False,
+                             cfg_overrides={"fsdp_gather_quant": True}))
+        show("A2 +microbatches=4",
+             dryrun.run_cell("qwen3_moe_235b", "train_4k", False,
+                             cfg_overrides={"fsdp_gather_quant": True},
+                             microbatches=4))
+    if "B" in which:
+        print("== B: jamba-1.5-large x train_4k x 16x16 ==")
+        show("B.base", dryrun.run_cell("jamba_1_5_large", "train_4k", False))
+        show("B1 +q8 weight gathers",
+             dryrun.run_cell("jamba_1_5_large", "train_4k", False,
+                             cfg_overrides={"fsdp_gather_quant": True}))
+        show("B2 +microbatches=4",
+             dryrun.run_cell("jamba_1_5_large", "train_4k", False,
+                             cfg_overrides={"fsdp_gather_quant": True},
+                             microbatches=4))
+    if "C" in which:
+        print("== C: ann distributed search (paper workload) ==")
+        for shape in ("search_1m", "search_1m_q8", "search_1m_q8i16",
+                      "search_16m_gist", "search_16m_gist_q8",
+                      "search_16m_gist_q8i16"):
+            show(f"C {shape}", dryrun.run_cell("ann", shape, False))
+
+
+if __name__ == "__main__":
+    run()

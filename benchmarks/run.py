@@ -1,0 +1,34 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Scale via env:
+BENCH_N (vectors per dataset, default 12000), BENCH_DATASETS.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import bench_kernels, bench_quality, bench_update
+
+    suites = [("kernels", bench_kernels.ALL),
+              ("update", bench_update.ALL),
+              ("quality", bench_quality.ALL)]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for sname, fns in suites:
+        if only and only != sname:
+            continue
+        for fn in fns:
+            try:
+                fn()
+            except Exception as e:  # noqa: BLE001 — report, keep going
+                print(f"{sname}/{fn.__name__},0.00,ERROR:{type(e).__name__}:"
+                      f"{str(e)[:120]}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Architecture registry: one module per assigned architecture."""
+from importlib import import_module
+
+from .base import (LM_SHAPES, ModelConfig, ShapeConfig, TrainConfig,
+                   param_count, shapes_for)
+
+ARCHS = [
+    "qwen3_1_7b", "minicpm_2b", "qwen3_32b", "command_r_35b",
+    "whisper_medium", "paligemma_3b", "phi35_moe", "qwen3_moe_235b",
+    "jamba_1_5_large", "rwkv6_3b",
+]
+
+_ALIAS = {
+    "qwen3-1.7b": "qwen3_1_7b", "minicpm-2b": "minicpm_2b",
+    "qwen3-32b": "qwen3_32b", "command-r-35b": "command_r_35b",
+    "whisper-medium": "whisper_medium", "paligemma-3b": "paligemma_3b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "jamba-1.5-large-398b": "jamba_1_5_large", "rwkv6-3b": "rwkv6_3b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = _ALIAS.get(arch, arch).replace("-", "_").replace(".", "_")
+    return import_module(f"repro.configs.{mod}").CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

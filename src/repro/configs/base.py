@@ -1,0 +1,192 @@
+"""Config system: model / shape / mesh / run configs.
+
+Every assigned architecture is a `ModelConfig` in its own module under
+repro.configs (select with --arch).  `reduced()` derives the family-faithful
+small config used by the CPU smoke tests; the full config is only ever
+lowered abstractly (dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    use_bias: bool = False
+    act: str = "swiglu"          # swiglu | geglu | gelu
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    # ---- MoE ----
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1           # layer i is MoE iff n_experts>0 and i % moe_every == moe_offset
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    # ---- hybrid (Jamba) ----
+    attn_every: int = 0          # 0 = all-attention; k = layer i is attention iff i % k == attn_offset
+    attn_offset: int = 4
+    # ---- SSM (Mamba) ----
+    ssm_d_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # ---- RWKV ----
+    rwkv_head_size: int = 64
+    # ---- enc-dec (Whisper) ----
+    n_enc_layers: int = 0        # >0 switches to encoder-decoder
+    n_dec_layers: int = 0
+    # ---- VLM (PaliGemma) ----
+    n_vision_tokens: int = 0     # stub frontend supplies this many embeddings
+    # ---- training ----
+    fsdp_gather_quant: bool = False   # ZeRO++-style int8 weight gathers
+    optimizer: str = "adamw"     # adamw | adafactor
+    lr_schedule: str = "cosine"  # cosine | wsd
+    remat: bool = True
+    attn_chunk_threshold: int = 8192   # use online-softmax chunks beyond this
+    attn_chunk: int = 1024
+    # dtype policy
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # chunked cross-entropy: flat-token chunk size (bounds the live
+    # (chunk, vocab) logits tensor; full (B,T,V) logits would not fit HBM)
+    loss_chunk: int = 512
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence mixing -> long_500k runs."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decode(self) -> bool:
+        return True  # no encoder-only archs assigned
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.n_experts > 0 and i % self.moe_every == self.moe_offset
+
+    def is_attn_layer(self, i: int) -> bool:
+        if self.family not in ("hybrid",):
+            return self.family != "ssm"
+        return self.attn_every > 0 and i % self.attn_every == self.attn_offset
+
+    def reduced(self) -> "ModelConfig":
+        """Family-faithful small config for CPU smoke tests: same wiring
+        (GQA ratios, MoE top-k, interleave pattern), tiny dims."""
+        kv_ratio = max(1, self.n_heads // max(self.n_kv_heads, 1))
+        n_heads = 4
+        n_kv = max(1, n_heads // kv_ratio)
+        layers = max(self.attn_every, 4) if self.family == "hybrid" else 2
+        return replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=layers * (2 if self.family == "hybrid" else 1),
+            d_model=64, n_heads=n_heads, n_kv_heads=n_kv, d_ff=128,
+            head_dim=16, vocab_size=512,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            n_enc_layers=2 if self.n_enc_layers else 0,
+            n_dec_layers=2 if self.n_dec_layers else 0,
+            n_vision_tokens=8 if self.n_vision_tokens else 0,
+            rwkv_head_size=16,
+            attn_chunk_threshold=64, attn_chunk=32,
+            remat=False, param_dtype="float32",
+        )
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+# The assigned LM shape set (identical for all 10 archs; skips per spec).
+LM_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shapes_for(cfg: ModelConfig) -> dict[str, ShapeConfig]:
+    out = dict(LM_SHAPES)
+    if not cfg.supports_long_context:
+        out.pop("long_500k")   # needs sub-quadratic attention (DESIGN.md)
+    return out
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    microbatches: int = 1        # grad accumulation
+    b1: float = 0.9
+    b2: float = 0.95
+    grad_compression: str = "none"   # none | int8
+
+
+def param_count(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameter estimate — used for MODEL_FLOPS = 6ND."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hd = cfg.resolved_head_dim
+    attn = d * (cfg.n_heads * hd) + 2 * d * (cfg.n_kv_heads * hd) \
+        + (cfg.n_heads * hd) * d
+    n_mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+    ffn_dense = n_mats * d * f
+
+    def layer_params(i: int) -> tuple[int, int]:
+        if cfg.family == "ssm":          # rwkv6
+            tmix = 4 * d * d + d * d     # r,k,v,o + gate
+            cmix = 2 * d * f
+            return tmix + cmix, tmix + cmix
+        if cfg.family == "hybrid" and not cfg.is_attn_layer(i):
+            d_in = cfg.ssm_expand * d
+            mix = d * 2 * d_in + d_in * d + d_in * (2 * cfg.ssm_d_state + 8)
+        else:
+            mix = attn
+        if cfg.is_moe_layer(i):
+            total = cfg.n_experts * ffn_dense + d * cfg.n_experts
+            active = cfg.top_k * ffn_dense + d * cfg.n_experts
+        else:
+            total = active = ffn_dense
+        return mix + total, mix + active
+
+    n_layers = cfg.n_layers if not cfg.is_encdec \
+        else cfg.n_enc_layers + cfg.n_dec_layers
+    tot = act = 0
+    for i in range(n_layers):
+        t, a = layer_params(i)
+        tot, act = tot + t, act + a
+    if cfg.is_encdec:   # cross-attention adds one attn block per dec layer
+        tot += cfg.n_dec_layers * attn
+        act += cfg.n_dec_layers * attn
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    return tot + emb, act + emb

@@ -1,0 +1,10 @@
+"""command-r-35b [dense] — GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b", family="dense",
+    n_layers=40, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22_528, vocab_size=256_000, head_dim=128,
+    qk_norm=False, use_bias=False, act="swiglu",
+    norm="layernorm", tie_embeddings=True,
+)

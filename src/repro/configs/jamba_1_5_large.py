@@ -1,0 +1,16 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attn 1:7 interleave, MoE 16e top-2
+every second layer [arXiv:2403.19887; hf].
+
+72 layers = 9 groups of 8; layer i is attention iff i % 8 == 4, MoE iff
+i % 2 == 1.  Adafactor (Adam fp32 state for 398B cannot fit one pod)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=24_576, vocab_size=65_536, head_dim=128,
+    n_experts=16, top_k=2, moe_every=2, moe_offset=1,
+    attn_every=8, attn_offset=4,
+    ssm_d_state=16, ssm_conv=4, ssm_expand=2,
+    act="swiglu", optimizer="adafactor", param_dtype="bfloat16",
+)

@@ -1,0 +1,10 @@
+"""minicpm-2b [dense] — llama-like, WSD schedule [arXiv:2404.06395; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b", family="dense",
+    n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+    d_ff=5760, vocab_size=122_753,
+    qk_norm=False, use_bias=False, act="swiglu",
+    lr_schedule="wsd", tie_embeddings=True,
+)

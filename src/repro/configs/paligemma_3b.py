@@ -1,0 +1,11 @@
+"""paligemma-3b [vlm] — SigLIP STUB (precomputed patch embeddings) + gemma
+backbone, MQA kv=1, GeGLU [arXiv:2407.07726; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b", family="vlm",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1,
+    d_ff=16_384, vocab_size=257_216, head_dim=256,
+    act="geglu", use_bias=False, tie_embeddings=True,
+    n_vision_tokens=256,
+)

@@ -1,0 +1,9 @@
+"""qwen3-32b [dense] — qk_norm, GQA [hf:Qwen/Qwen3-8B; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b", family="dense",
+    n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8,
+    d_ff=25_600, vocab_size=151_936, head_dim=80,  # d_model / n_heads
+    qk_norm=True, use_bias=False, act="swiglu", rope_theta=1e6,
+)

@@ -1,0 +1,12 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B; hf].
+
+Adafactor: 235B of Adam fp32 state exceeds single-pod HBM (EXPERIMENTS.md)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4,
+    d_ff=1536, vocab_size=151_936, head_dim=128, qk_norm=True,
+    n_experts=128, top_k=8, act="swiglu", rope_theta=1e6,
+    optimizer="adafactor", param_dtype="bfloat16",
+)

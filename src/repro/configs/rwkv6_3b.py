@@ -1,0 +1,10 @@
+"""rwkv6-3b [ssm] — "Finch", attention-free, data-dependent decay
+[arXiv:2404.05892; hf]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=40, n_kv_heads=40,
+    d_ff=8960, vocab_size=65_536,
+    rwkv_head_size=64, act="relu_sq", norm="layernorm",
+)

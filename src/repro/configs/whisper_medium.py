@@ -1,0 +1,15 @@
+"""whisper-medium [audio] — enc-dec; conv frontend STUB: input_specs()
+provides precomputed frame embeddings [arXiv:2212.04356].
+
+The assigned spec lists the 24L/1024d backbone; faithful whisper-medium is
+24 encoder + 24 decoder layers (DESIGN.md Sec. 4)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="encdec",
+    n_layers=24, n_enc_layers=24, n_dec_layers=24,
+    d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab_size=51_865,
+    act="gelu", use_bias=True, norm="layernorm",
+    rope_theta=0.0,  # whisper uses learned/sinusoidal positions
+)

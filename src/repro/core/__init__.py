@@ -1,0 +1,25 @@
+"""Greator's contribution: topology-aware localized updates for a
+graph-based ANN index, plus the FreshDiskANN / IP-DiskANN baselines.
+
+Public API:
+    build_vamana / build_engine  — construct the base index
+    StreamingEngine              — insert/delete/search with batch updates
+    GraphIndex / IndexParams     — the topology-aware index itself
+    beam_search / robust_prune   — the jitted primitives
+"""
+from .build import brute_force_knn, build_vamana, find_medoid
+from .engine import StreamingEngine, build_engine
+from .index import GraphIndex, IndexParams
+from .pq import ProductQuantizer
+from .prune import batched_robust_prune, robust_prune
+from .search import batch_beam_search, beam_search
+from .storage import IOCostModel, IOCounters, IOSimulator, PAGE_SIZE
+from .update import ENGINES, BatchStats, EngineConfig
+
+__all__ = [
+    "brute_force_knn", "build_vamana", "build_engine", "find_medoid",
+    "StreamingEngine", "GraphIndex", "IndexParams", "batched_robust_prune",
+    "ProductQuantizer", "robust_prune", "batch_beam_search", "beam_search", "IOCostModel",
+    "IOCounters", "IOSimulator", "PAGE_SIZE", "ENGINES", "BatchStats",
+    "EngineConfig",
+]

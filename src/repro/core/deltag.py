@@ -1,0 +1,48 @@
+"""Page-aware reverse-edge cache ΔG (paper Sec. 4.2, Fig. 5).
+
+Insertion produces reverse edges {edge(p', p) | p' in N_out(p)}.  Writing
+them immediately would issue one random write per edge; ΔG instead groups
+pending edges by the *page* of the source vertex (resolved through
+Local_Map), so the patch phase performs exactly one read-modify-write per
+touched page no matter how many edges land on it.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Iterator
+
+
+class DeltaG:
+    def __init__(self) -> None:
+        # page_id -> slot -> set of new neighbor slots
+        self._pages: dict[int, dict[int, set[int]]] = defaultdict(
+            lambda: defaultdict(set))
+        self._n_edges = 0
+
+    def add_reverse_edge(self, src_slot: int, src_page: int,
+                         new_nbr_slot: int) -> None:
+        tbl = self._pages[int(src_page)][int(src_slot)]
+        if int(new_nbr_slot) not in tbl:
+            tbl.add(int(new_nbr_slot))
+            self._n_edges += 1
+
+    @property
+    def n_edges(self) -> int:
+        return self._n_edges
+
+    @property
+    def n_pages(self) -> int:
+        return len(self._pages)
+
+    @property
+    def n_vertices(self) -> int:
+        return sum(len(v) for v in self._pages.values())
+
+    def pages(self) -> Iterator[tuple[int, dict[int, set[int]]]]:
+        """Iterate (page_id, {slot: new_neighbor_slots}) in page order."""
+        for pid in sorted(self._pages):
+            yield pid, self._pages[pid]
+
+    def clear(self) -> None:
+        self._pages.clear()
+        self._n_edges = 0

@@ -1,0 +1,237 @@
+"""Greator streaming system (paper Sec. 6) — the user-facing engine.
+
+Wraps a GraphIndex + one of the three update engines behind an
+insert/delete/search API with:
+
+* **small-batch accumulation** — updates stage in memory (and in a
+  write-ahead log on disk) until `batch_size` is reached, then one
+  delete/insert/patch batch runs (paper's update workflow, Fig. 4);
+* **durability / fault tolerance** — the WAL is replayed on restart for
+  updates that had not been folded into a checkpoint; `checkpoint()` writes
+  the full index state with an atomic manifest (tmp + rename), `restore()`
+  reloads it.  This is the ANN-side analogue of the trainer's
+  checkpoint/restart path and is exercised by tests/test_failure_recovery.py;
+* **search** — jitted batched beam search with alive-filtering of results
+  (deleted vertices may be routed through but never returned).
+
+Page-level concurrency control from the paper degenerates to phase barriers
+in this single-process host: within a batch the phases are serial, and
+searches interleave only between batches — the same consistency the paper's
+page locks provide, without simulated lock traffic.  Noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from .build import build_vamana
+from .index import QUERY_FILE, GraphIndex, IndexParams
+from .search import batch_beam_search
+from .storage import IOSimulator
+from .update import ENGINES, BatchStats, EngineConfig
+
+
+@dataclass
+class SearchStats:
+    latencies_s: list[float] = field(default_factory=list)
+
+    def percentile(self, p: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.array(self.latencies_s), p))
+
+
+class StreamingEngine:
+    def __init__(self, index: GraphIndex, *, engine: str = "greator",
+                 cfg: EngineConfig | None = None, batch_size: int = 1000,
+                 wal_dir: str | None = None):
+        self.index = index
+        self.engine = ENGINES[engine](index, cfg)
+        self.batch_size = batch_size
+        self.pending_deletes: list[int] = []
+        self.pending_inserts: list[tuple[int, np.ndarray]] = []
+        self.batch_history: list[BatchStats] = []
+        self.search_stats = SearchStats()
+        self.wal_dir = wal_dir
+        self._next_id = (max((int(v) for v in index._local_map), default=-1)
+                         + 1)
+        if wal_dir:
+            os.makedirs(wal_dir, exist_ok=True)
+            self._replay_wal()
+
+    # ------------------------------------------------------------- updates
+    def insert(self, vec: np.ndarray, vid: int | None = None) -> int:
+        vid = self._next_id if vid is None else int(vid)
+        self._next_id = max(self._next_id, vid + 1)
+        self.pending_inserts.append((vid, np.asarray(vec, np.float32)))
+        self._wal_append("I", vid, vec)
+        self._maybe_flush()
+        return vid
+
+    def delete(self, vid: int) -> None:
+        self.pending_deletes.append(int(vid))
+        self._wal_append("D", int(vid), None)
+        self._maybe_flush()
+
+    def flush(self) -> BatchStats | None:
+        if not self.pending_deletes and not self.pending_inserts:
+            return None
+        stats = self.engine.apply_batch(self.pending_deletes,
+                                        self.pending_inserts)
+        self.batch_history.append(stats)
+        self.pending_deletes, self.pending_inserts = [], []
+        self._wal_truncate()
+        return stats
+
+    def _maybe_flush(self) -> None:
+        if (len(self.pending_deletes) + len(self.pending_inserts)
+                >= self.batch_size):
+            self.flush()
+
+    # -------------------------------------------------------------- search
+    def search(self, queries: np.ndarray, k: int = 10, L: int = 120,
+               W: int = 4) -> np.ndarray:
+        """Returns external ids, (B, k); -1 pads.  Alive-filtered."""
+        idx = self.index
+        dev_vecs, dev_nbrs = idx.device_arrays()
+        entry_slot = idx.slot_of(idx.entry_id)
+        if entry_slot < 0:  # entry was deleted: fall back to any alive slot
+            entry_slot = int(np.flatnonzero(idx.alive)[0])
+            idx.entry_id = int(idx._slot_owner[entry_slot])
+        t0 = time.perf_counter()
+        res = batch_beam_search(
+            dev_vecs, dev_nbrs, jnp.asarray(queries, jnp.float32),
+            jnp.asarray([entry_slot], jnp.int32),
+            L=L, W=W, metric=idx.params.metric)
+        ids = np.asarray(res.ids)
+        dists = np.asarray(res.dists)
+        elapsed = time.perf_counter() - t0
+        # per-query latency: beam search is embarrassingly parallel across
+        # queries; we record per-query compute as elapsed/B plus the modeled
+        # I/O of its own visited pages (queries are batched only for the
+        # simulator's convenience).
+        B = queries.shape[0]
+        visited = np.asarray(res.visited)
+        for b in range(B):
+            v = visited[b]
+            v = v[v >= 0]
+            pages = len(np.unique(idx.page_of(v)))
+            io_t = pages / idx.io.cost.rand_read_iops
+            self.search_stats.latencies_s.append(elapsed / B + io_t)
+        # alive filter + slot->external-id mapping
+        out = np.full((B, k), -1, np.int64)
+        for b in range(B):
+            row = ids[b]
+            ok = (row >= 0) & idx.alive[np.maximum(row, 0)] \
+                & np.isfinite(dists[b])
+            ext = idx._slot_owner[row[ok]][:k]
+            out[b, :len(ext)] = ext
+        return out
+
+    # ------------------------------------------------------ WAL + checkpoint
+    def _wal_path(self) -> str:
+        return os.path.join(self.wal_dir, "wal.jsonl")
+
+    def _wal_append(self, op: str, vid: int, vec) -> None:
+        if not self.wal_dir:
+            return
+        rec = {"op": op, "vid": vid}
+        if vec is not None:
+            rec["vec"] = np.asarray(vec, np.float32).tolist()
+        with open(self._wal_path(), "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+    def _wal_truncate(self) -> None:
+        if self.wal_dir and os.path.exists(self._wal_path()):
+            os.unlink(self._wal_path())
+
+    def _replay_wal(self) -> None:
+        path = self._wal_path()
+        if not os.path.exists(path):
+            return
+        with open(path) as f:
+            for line in f:
+                rec = json.loads(line)
+                if rec["op"] == "I":
+                    vid = int(rec["vid"])
+                    self.pending_inserts.append(
+                        (vid, np.asarray(rec["vec"], np.float32)))
+                    self._next_id = max(self._next_id, vid + 1)
+                else:
+                    self.pending_deletes.append(int(rec["vid"]))
+
+    def checkpoint(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        tmp = os.path.join(path, ".tmp.npz")
+        idx = self.index
+        n = idx.slots_in_use
+        np.savez_compressed(
+            tmp,
+            vectors=idx.vectors[:n], neighbors=idx.neighbors[:n],
+            topo_neighbors=idx.topo_neighbors[:n], alive=idx.alive[:n],
+            slot_owner=idx._slot_owner[:n],
+            free_q=np.array(list(idx.free_q), np.int64),
+            entry_id=np.int64(idx.entry_id),
+            next_id=np.int64(self._next_id))
+        manifest = {
+            "n_slots": n, "dim": idx.params.dim, "R": idx.params.R,
+            "R_relaxed": idx.params.R_relaxed, "metric": idx.params.metric,
+            "engine": self.engine.name, "time": time.time(),
+        }
+        final = os.path.join(path, "index.npz")
+        os.replace(tmp, final)  # atomic commit
+        with open(os.path.join(path, ".manifest.tmp"), "w") as f:
+            json.dump(manifest, f)
+        os.replace(os.path.join(path, ".manifest.tmp"),
+                   os.path.join(path, "manifest.json"))
+        self._wal_truncate()
+
+    @classmethod
+    def restore(cls, path: str, *, engine: str | None = None,
+                cfg: EngineConfig | None = None, batch_size: int = 1000,
+                wal_dir: str | None = None,
+                io: IOSimulator | None = None) -> "StreamingEngine":
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "index.npz"))
+        params = IndexParams(dim=manifest["dim"], R=manifest["R"],
+                             R_relaxed=manifest["R_relaxed"],
+                             metric=manifest["metric"])
+        n = manifest["n_slots"]
+        idx = GraphIndex(params, capacity=max(int(n * 1.5), 16), io=io)
+        idx.vectors[:n] = data["vectors"]
+        idx.neighbors[:n] = data["neighbors"]
+        idx.topo_neighbors[:n] = data["topo_neighbors"]
+        idx.alive[:n] = data["alive"]
+        idx._slot_owner[:n] = data["slot_owner"]
+        idx._next_slot = n
+        idx.free_q.extend(int(s) for s in data["free_q"])
+        idx.entry_id = int(data["entry_id"])
+        for slot in range(n):
+            if idx.alive[slot]:
+                idx._local_map[int(idx._slot_owner[slot])] = slot
+        eng = cls(idx, engine=engine or manifest["engine"], cfg=cfg,
+                  batch_size=batch_size, wal_dir=wal_dir)
+        eng._next_id = int(data["next_id"])
+        return eng
+
+
+def build_engine(vectors: np.ndarray, *, engine: str = "greator",
+                 R: int = 32, R_relaxed: int | None = None,
+                 L_build: int = 75, alpha: float = 1.2, max_c: int = 96,
+                 batch_size: int = 1000, seed: int = 0,
+                 wal_dir: str | None = None,
+                 cfg: EngineConfig | None = None) -> StreamingEngine:
+    """Build a base index and wrap it in a StreamingEngine."""
+    params = IndexParams(dim=vectors.shape[1], R=R,
+                         R_relaxed=R_relaxed if R_relaxed else R + 1)
+    cfg = cfg or EngineConfig(L_build=L_build, alpha=alpha, max_c=max_c)
+    idx = build_vamana(vectors, params=params, L_build=L_build, alpha=alpha,
+                       max_c=max_c, seed=seed)
+    return StreamingEngine(idx, engine=engine, cfg=cfg,
+                           batch_size=batch_size, wal_dir=wal_dir)

@@ -1,0 +1,262 @@
+"""Topology-aware ANNS index (paper Sec. 4.1).
+
+Two coupled stores, exactly as the paper lays them out on disk:
+
+* **Query index** — per-vertex record of (vector, degree, out-neighbors) in a
+  page-aligned slot layout (DiskANN's format: ``floor(PAGE/record)`` vertices
+  per 4 KB page).  `Local_Map` maps external vertex ids to slots; `Free_Q`
+  recycles slots freed by deletions (Sec. 4.2 Deletion/Insertion).
+* **Lightweight topology** — the out-neighbor lists *only*, stored separately
+  so affected-vertex identification scans `O(|G|)` bytes instead of
+  `O(|X|+|G|)`.  It is synchronized lazily: updates mark rows dirty and
+  `sync_topology()` (the "background" thread in the paper) copies them over,
+  charging topology-file writes.
+
+Arrays live in numpy on the host (the host owns index mutation, the
+accelerator owns distance math — mirroring the paper's CPU-orchestrates /
+SIMD-computes split); device copies for jitted search are cached and
+invalidated on mutation.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from .storage import PAGE_SIZE, IOSimulator
+
+QUERY_FILE = "query_index"
+TOPO_FILE = "topology"
+
+
+@dataclass
+class IndexParams:
+    dim: int
+    R: int = 32                 # strict neighbor limit
+    R_relaxed: int = 33         # R' (paper default R+1)
+    metric: str = "sq_l2"
+    dtype: str = "float32"
+
+    @property
+    def record_bytes(self) -> int:
+        """DiskANN record: vector + uint32 degree + R' uint32 neighbor ids."""
+        itemsize = np.dtype(self.dtype).itemsize
+        return self.dim * itemsize + 4 + 4 * self.R_relaxed
+
+    @property
+    def vertices_per_page(self) -> int:
+        return max(1, PAGE_SIZE // self.record_bytes)
+
+    @property
+    def topo_row_bytes(self) -> int:
+        return 4 + 4 * self.R_relaxed
+
+    @property
+    def topo_rows_per_page(self) -> int:
+        return max(1, PAGE_SIZE // self.topo_row_bytes)
+
+
+class GraphIndex:
+    """Mutable slot-array graph index with page accounting."""
+
+    def __init__(self, params: IndexParams, capacity: int,
+                 io: IOSimulator | None = None):
+        self.params = params
+        self.capacity = capacity
+        self.io = io or IOSimulator()
+
+        self.vectors = np.zeros((capacity, params.dim), np.float32)
+        self.neighbors = np.full((capacity, params.R_relaxed), -1, np.int32)
+        self.alive = np.zeros((capacity,), bool)
+
+        # Local_Map: external id -> slot (-1 absent).  Slots == ids when no
+        # deletion has recycled anything; they diverge afterwards.
+        self._local_map: dict[int, int] = {}
+        self.free_q: deque[int] = deque()      # Free_Q
+        self._next_slot = 0
+        self.entry_id: int = -1                # medoid vertex (external id)
+
+        # lightweight topology (lazily synced copy of `neighbors`)
+        self.topo_neighbors = np.full_like(self.neighbors, -1)
+        self._topo_dirty: set[int] = set()
+
+        # device-side caches for jitted search
+        self._dev_vectors = None
+        self._dev_neighbors = None
+
+    # ------------------------------------------------------------------ slots
+    def slot_of(self, vid: int) -> int:
+        return self._local_map.get(int(vid), -1)
+
+    def slots_of(self, vids) -> np.ndarray:
+        return np.array([self._local_map.get(int(v), -1) for v in vids],
+                        np.int64)
+
+    def id_at(self, slot: int) -> int:
+        return int(self._slot_owner[slot]) if self.alive[slot] else -1
+
+    @property
+    def n_alive(self) -> int:
+        return int(self.alive.sum())
+
+    @property
+    def slots_in_use(self) -> int:
+        return self._next_slot
+
+    def allocate_slot(self, vid: int) -> int:
+        """Free_Q pop, else append at file end (paper Sec. 4.2 Insertion)."""
+        if self.free_q:
+            slot = self.free_q.popleft()
+        else:
+            slot = self._next_slot
+            if slot >= self.capacity:
+                self._grow()
+            self._next_slot += 1
+        self._local_map[int(vid)] = slot
+        self._slot_owner[slot] = vid
+        return slot
+
+    def release_slot(self, vid: int) -> int:
+        """Deletion: drop from Local_Map, recycle slot via Free_Q."""
+        slot = self._local_map.pop(int(vid))
+        self.alive[slot] = False
+        self._slot_owner[slot] = -1
+        self.free_q.append(slot)
+        return slot
+
+    def _grow(self) -> None:
+        new_cap = self.capacity * 2
+        for name in ("vectors", "neighbors", "topo_neighbors"):
+            arr = getattr(self, name)
+            grown = np.full((new_cap,) + arr.shape[1:], -1, arr.dtype) \
+                if arr.dtype == np.int32 else np.zeros(
+                    (new_cap,) + arr.shape[1:], arr.dtype)
+            grown[:self.capacity] = arr
+            setattr(self, name, grown)
+        alive = np.zeros((new_cap,), bool)
+        alive[:self.capacity] = self.alive
+        self.alive = alive
+        owner = np.full((new_cap,), -1, np.int64)
+        owner[:self.capacity] = self._slot_owner
+        self._slot_owner = owner
+        self.capacity = new_cap
+        self.invalidate_device()
+
+    # `_slot_owner` is created lazily so __init__ stays linear
+    @property
+    def _slot_owner(self) -> np.ndarray:
+        if not hasattr(self, "_slot_owner_arr"):
+            self._slot_owner_arr = np.full((self.capacity,), -1, np.int64)
+        return self._slot_owner_arr
+
+    @_slot_owner.setter
+    def _slot_owner(self, v) -> None:
+        self._slot_owner_arr = v
+
+    # ------------------------------------------------------------------ pages
+    def page_of(self, slot) -> np.ndarray:
+        return np.asarray(slot) // self.params.vertices_per_page
+
+    def topo_page_of(self, slot) -> np.ndarray:
+        return np.asarray(slot) // self.params.topo_rows_per_page
+
+    def file_bytes(self) -> int:
+        vpp = self.params.vertices_per_page
+        n_pages = -(-max(self._next_slot, 1) // vpp)
+        return n_pages * PAGE_SIZE
+
+    def topo_bytes(self) -> int:
+        rpp = self.params.topo_rows_per_page
+        n_pages = -(-max(self._next_slot, 1) // rpp)
+        return n_pages * PAGE_SIZE
+
+    # ------------------------------------------------------- vertex mutation
+    def write_vertex(self, slot: int, vec: np.ndarray,
+                     nbr_slots: np.ndarray) -> None:
+        self.vectors[slot] = vec
+        self.set_neighbors(slot, nbr_slots)
+        self.alive[slot] = True
+        self.invalidate_device()
+
+    def set_neighbors(self, slot: int, nbr_slots) -> None:
+        nbr = np.asarray(nbr_slots, np.int32)
+        nbr = nbr[nbr >= 0][: self.params.R_relaxed]
+        row = np.full((self.params.R_relaxed,), -1, np.int32)
+        row[: len(nbr)] = nbr
+        self.neighbors[slot] = row
+        self._topo_dirty.add(int(slot))
+        self._dev_neighbors = None
+
+    def get_neighbors(self, slot: int) -> np.ndarray:
+        row = self.neighbors[slot]
+        return row[row >= 0]
+
+    # -------------------------------------------------- lightweight topology
+    def sync_topology(self, charge_io: bool = True) -> int:
+        """Lazy background sync (paper Sec. 4.1 Index Consistency).
+
+        Copies dirty rows into the topology store and charges random writes
+        to the topology file at page granularity.  Returns #dirty rows."""
+        dirty = np.array(sorted(self._topo_dirty), np.int64)
+        if len(dirty) == 0:
+            return 0
+        self.topo_neighbors[dirty] = self.neighbors[dirty]
+        if charge_io:
+            self.io.rand_write(TOPO_FILE, self.topo_page_of(dirty))
+        self._topo_dirty.clear()
+        return len(dirty)
+
+    def topo_stale_rows(self) -> int:
+        return len(self._topo_dirty)
+
+    # ----------------------------------------------------------------- clone
+    def clone(self, io: IOSimulator | None = None) -> "GraphIndex":
+        """Deep copy (fresh IO simulator unless given) — lets benchmarks run
+        several engines from one identical base build."""
+        import dataclasses as _dc
+        other = GraphIndex(_dc.replace(self.params), self.capacity,
+                           io=io or IOSimulator())
+        other.vectors = self.vectors.copy()
+        other.neighbors = self.neighbors.copy()
+        other.topo_neighbors = self.topo_neighbors.copy()
+        other.alive = self.alive.copy()
+        other._local_map = dict(self._local_map)
+        other.free_q = deque(self.free_q)
+        other._next_slot = self._next_slot
+        other.entry_id = self.entry_id
+        other._slot_owner = self._slot_owner.copy()
+        other._topo_dirty = set(self._topo_dirty)
+        return other
+
+    # ------------------------------------------------------------ device view
+    def invalidate_device(self) -> None:
+        self._dev_vectors = None
+        self._dev_neighbors = None
+
+    def device_arrays(self):
+        if self._dev_vectors is None:
+            self._dev_vectors = jnp.asarray(self.vectors)
+        if self._dev_neighbors is None:
+            self._dev_neighbors = jnp.asarray(self.neighbors)
+        return self._dev_vectors, self._dev_neighbors
+
+    # ------------------------------------------------------------- integrity
+    def check_invariants(self) -> None:
+        """Structural invariants used by the property tests."""
+        R_relaxed = self.params.R_relaxed
+        for vid, slot in self._local_map.items():
+            assert self.alive[slot], (vid, slot)
+            assert self._slot_owner[slot] == vid
+        live = np.flatnonzero(self.alive)
+        nbr = self.neighbors[live]
+        deg = (nbr >= 0).sum(axis=1)
+        assert (deg <= R_relaxed).all()
+        # no self loops
+        assert not (nbr == live[:, None]).any()
+        # neighbor slots must be in-range
+        assert (nbr < self._next_slot).all()
+        free = set(self.free_q)
+        assert len(free) == len(self.free_q), "Free_Q has duplicates"
+        assert all(not self.alive[s] for s in free)

@@ -1,0 +1,108 @@
+"""Product quantization (IVFADC-style [28]) — the in-RAM compressed vectors
+FreshDiskANN/Greator use for update-phase distance math (Sec. 6 of [50]:
+the full-precision vector lives on disk; RAM holds M-subspace uint8 codes).
+
+`ProductQuantizer.fit` runs per-subspace k-means (vmapped Lloyd iterations,
+jit-compiled); `encode` maps vectors to (N, M) uint8; asymmetric distances
+(query in fp32 vs database codes) come from a per-query lookup table —
+O(M) adds per distance instead of O(d) multiply-adds, and 4·d/M times less
+memory than fp32 (32x at the default M = d/8).
+
+The engines use full-precision in-memory vectors by default (an upper bound
+for PQ, noted in repair.py); this module provides the compressed analogue +
+recall validation (tests/test_pq.py) and the memory/recall trade-off row in
+the benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def _kmeans(x: jnp.ndarray, k: int, iters: int, key) -> jnp.ndarray:
+    """Lloyd's k-means for one subspace: x (N, ds) -> centroids (k, ds)."""
+    n = x.shape[0]
+    init = jax.random.choice(key, x, (k,), replace=False)
+
+    def step(cent, _):
+        d = (jnp.sum(x * x, 1, keepdims=True)
+             - 2 * x @ cent.T + jnp.sum(cent * cent, 1))
+        assign = jnp.argmin(d, axis=1)
+        one_hot = jax.nn.one_hot(assign, k, dtype=x.dtype)      # (N, k)
+        counts = one_hot.sum(0)
+        sums = one_hot.T @ x
+        new = jnp.where(counts[:, None] > 0,
+                        sums / jnp.maximum(counts[:, None], 1), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, init, None, length=iters)
+    return cent
+
+
+@dataclass
+class ProductQuantizer:
+    centroids: np.ndarray     # (M, K, ds)
+    dim: int
+
+    @property
+    def m(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def ds(self) -> int:
+        return self.centroids.shape[2]
+
+    # ------------------------------------------------------------- train --
+    @classmethod
+    def fit(cls, vectors: np.ndarray, *, m: int | None = None, k: int = 256,
+            iters: int = 12, seed: int = 0) -> "ProductQuantizer":
+        n, d = vectors.shape
+        m = m or max(d // 8, 1)
+        assert d % m == 0, (d, m)
+        ds = d // m
+        k = min(k, n)
+        sub = jnp.asarray(vectors.reshape(n, m, ds).transpose(1, 0, 2))
+        keys = jax.random.split(jax.random.PRNGKey(seed), m)
+        cents = jax.vmap(lambda xs, kk: _kmeans(xs, k, iters, kk))(sub, keys)
+        return cls(centroids=np.asarray(cents), dim=d)
+
+    # ------------------------------------------------------------ encode --
+    def encode(self, vectors: np.ndarray) -> np.ndarray:
+        n, d = vectors.shape
+        sub = vectors.reshape(n, self.m, self.ds)
+        cents = self.centroids                                   # (M,K,ds)
+        # (M, N, K) distances per subspace
+        codes = np.empty((n, self.m), np.uint8)
+        for j in range(self.m):
+            diff = sub[:, j, None, :] - cents[j][None, :, :]
+            codes[:, j] = np.argmin(np.einsum("nkd,nkd->nk", diff, diff),
+                                    axis=1)
+        return codes
+
+    def decode(self, codes: np.ndarray) -> np.ndarray:
+        n = codes.shape[0]
+        out = np.empty((n, self.dim), np.float32)
+        for j in range(self.m):
+            out[:, j * self.ds:(j + 1) * self.ds] = \
+                self.centroids[j][codes[:, j]]
+        return out
+
+    # ---------------------------------------------------------- distances --
+    def lut(self, query: np.ndarray) -> np.ndarray:
+        """Per-query table (M, K) of squared subspace distances."""
+        q = query.reshape(self.m, 1, self.ds)
+        diff = q - self.centroids
+        return np.einsum("mkd,mkd->mk", diff, diff)
+
+    def adc(self, query: np.ndarray, codes: np.ndarray) -> np.ndarray:
+        """Asymmetric distances query (d,) vs codes (N, M) -> (N,)."""
+        table = self.lut(query)                                  # (M, K)
+        return table[np.arange(self.m)[None, :], codes].sum(axis=1)
+
+    def bytes_per_vector(self) -> int:
+        return self.m

@@ -1,0 +1,81 @@
+"""RobustPrune (alpha-RNG neighbor pruning) — paper Algorithm 1 line 7 / [50].
+
+Static-shape JAX formulation: the candidate set is padded to C_CAP; the
+pairwise candidate-distance matrix (the O(|C|^2 d) term the paper attributes
+pruning cost to) is computed once, then the greedy alpha-occlusion loop runs
+as a fori_loop over at most R selections on scalar masks — no further vector
+math.  vmap over a batch of vertices gives the batched pruner the update
+engines use (all prune-triggering vertices in an update batch are pruned in
+one device call).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+class PruneResult(NamedTuple):
+    ids: jnp.ndarray      # (R,) int32 kept neighbor ids, -1 padded
+    n_kept: jnp.ndarray   # () int32
+    n_dist: jnp.ndarray   # () int32 distance computations charged
+
+
+@functools.partial(jax.jit, static_argnames=("R", "metric"))
+def robust_prune(
+    p_vec: jnp.ndarray,       # (d,) the vertex being pruned
+    cand_ids: jnp.ndarray,    # (C,) int32 candidate ids, -1 = invalid
+    cand_vecs: jnp.ndarray,   # (C, d) candidate vectors (rows for -1 ignored)
+    alpha: jnp.ndarray,       # () float32
+    *,
+    R: int,
+    metric: str = "sq_l2",
+) -> PruneResult:
+    C = cand_ids.shape[0]
+    valid = cand_ids >= 0
+
+    if metric == "sq_l2":
+        dist_p = ref.pairwise_sq_l2(p_vec[None, :], cand_vecs)[0]
+        dmat = ref.pairwise_sq_l2(cand_vecs, cand_vecs)
+    else:
+        dist_p = ref.pairwise_ip(p_vec[None, :], cand_vecs)[0]
+        dmat = ref.pairwise_ip(cand_vecs, cand_vecs)
+    dist_p = jnp.where(valid, dist_p, jnp.inf)
+    n_dist = jnp.sum(valid) * (jnp.sum(valid) + 1)  # C dists to p + C^2 matrix
+
+    # DiskANN's alpha applies to *metric* distances; with squared L2 the
+    # equivalent domination threshold is alpha^2.
+    alpha_eff = alpha * alpha if metric == "sq_l2" else alpha
+
+    def step(i, carry):
+        alive, kept, n_kept = carry
+        score = jnp.where(alive, dist_p, jnp.inf)
+        sel = jnp.argmin(score)
+        ok = jnp.isfinite(score[sel])
+        kept = kept.at[i].set(jnp.where(ok, cand_ids[sel], -1))
+        # alpha-occlusion: candidate c is dominated if
+        #   alpha * dist(sel, c) <= dist(p, c)
+        dominated = alpha_eff * dmat[sel] <= dist_p
+        alive = jnp.where(ok, alive & ~dominated, alive)
+        alive = alive.at[sel].set(False)
+        return alive, kept, n_kept + ok.astype(jnp.int32)
+
+    kept0 = jnp.full((R,), -1, jnp.int32)
+    _, kept, n_kept = jax.lax.fori_loop(0, R, step, (valid, kept0, jnp.int32(0)))
+    return PruneResult(kept, n_kept, n_dist)
+
+
+def batched_robust_prune(p_vecs, cand_ids, cand_vecs, alpha, *, R,
+                         metric="sq_l2"):
+    """vmapped robust_prune.
+
+    p_vecs (B, d), cand_ids (B, C), cand_vecs (B, C, d), alpha () or (B,).
+    """
+    alpha = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32),
+                             (p_vecs.shape[0],))
+    fn = functools.partial(robust_prune, R=R, metric=metric)
+    return jax.vmap(fn)(p_vecs, cand_ids, cand_vecs, alpha)

@@ -1,0 +1,157 @@
+"""Static-shape graph beam search (GreedySearch / beam search, paper Sec. 2.1).
+
+JAX-native reformulation of DiskANN's beam search: the dynamic priority queue
+becomes a fixed-size pool of (id, dist, visited) triples kept sorted by
+distance, and the loop is a `lax.while_loop` whose condition is "some entry in
+the top-L window is unvisited".  Every iteration expands the W best unvisited
+candidates (the beam), gathers their adjacency rows, dedups against the pool,
+scores the new candidates, and re-sorts.  All shapes are static so the whole
+search jits and vmaps over a query batch.
+
+The search may route *through* deleted vertices (FreshDiskANN semantics for
+streaming indexes — dangling edges are tolerated during navigation); deleted
+vertices are filtered from the result window by the caller using the alive
+mask.  The visited log is returned both as the candidate pool for index
+construction (Vamana uses V(visited) as the prune candidate set) and for I/O
+accounting (one visited vertex == one random page read in the paper's cost
+model).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SearchResult(NamedTuple):
+    ids: jnp.ndarray        # (L,) int32 pool window, sorted by distance, -1 pad
+    dists: jnp.ndarray      # (L,) float32, +inf pad
+    visited: jnp.ndarray    # (max_iters * W,) int32 vertex ids in visit order, -1 pad
+    n_hops: jnp.ndarray     # () int32 — loop iterations
+    n_dist: jnp.ndarray     # () int32 — distance computations performed
+
+
+def _sq_l2(q: jnp.ndarray, v: jnp.ndarray, scale=None) -> jnp.ndarray:
+    vf = v.astype(jnp.float32)
+    if scale is not None:   # int8-quantized vector rows (hillclimb C)
+        vf = vf * scale
+    diff = vf - q.astype(jnp.float32)[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def _ip(q: jnp.ndarray, v: jnp.ndarray, scale=None) -> jnp.ndarray:
+    vf = v.astype(jnp.float32)
+    if scale is not None:
+        vf = vf * scale
+    return -(vf @ q.astype(jnp.float32))
+
+
+_METRICS = {"sq_l2": _sq_l2, "ip": _ip}
+
+
+@functools.partial(
+    jax.jit, static_argnames=("L", "W", "max_iters", "metric",
+                              "vec_scale"))
+def beam_search(
+    vectors: jnp.ndarray,      # (N, d)
+    neighbors: jnp.ndarray,    # (N, Rcap) int32, -1 padded
+    query: jnp.ndarray,        # (d,)
+    entry_ids: jnp.ndarray,    # (E,) int32 starting points (-1 = absent)
+    *,
+    L: int = 64,
+    W: int = 4,
+    max_iters: int = 0,
+    metric: str = "sq_l2",
+    vec_scale: float | None = None,
+) -> SearchResult:
+    """Single-query beam search.  vmap over `query`/`entry_ids` for batches."""
+    n, _ = vectors.shape
+    rcap = neighbors.shape[1]
+    if max_iters <= 0:
+        # every hop visits >= 1 new window vertex; 4L covers even long
+        # low-degree navigation chains (the window refills as it advances)
+        max_iters = 4 * L
+    base_fn = _METRICS[metric]
+    dist_fn = (lambda q, v: base_fn(q, v, vec_scale)) if vec_scale \
+        else base_fn
+    P = L + W * rcap  # pool size
+
+    # --- init pool from entries ------------------------------------------
+    e = entry_ids.shape[0]
+    safe_e = jnp.clip(entry_ids, 0, n - 1)
+    e_dists = jnp.where(entry_ids >= 0, dist_fn(query, vectors[safe_e]), jnp.inf)
+    pool_ids = jnp.full((P,), -1, jnp.int32).at[:e].set(
+        jnp.where(entry_ids >= 0, entry_ids, -1).astype(jnp.int32))
+    pool_dists = jnp.full((P,), jnp.inf, jnp.float32).at[:e].set(e_dists)
+    pool_vis = jnp.zeros((P,), jnp.bool_)
+    order = jnp.argsort(pool_dists)
+    pool_ids, pool_dists, pool_vis = (
+        pool_ids[order], pool_dists[order], pool_vis[order])
+
+    visited_log = jnp.full((max_iters * W,), -1, jnp.int32)
+    in_window = jnp.arange(P) < L
+
+    def cond(state):
+        pool_ids, pool_dists, pool_vis, _log, it, _nd = state
+        frontier = (~pool_vis) & (pool_ids >= 0) & in_window \
+            & jnp.isfinite(pool_dists)
+        return (it < max_iters) & jnp.any(frontier)
+
+    def body(state):
+        pool_ids, pool_dists, pool_vis, log, it, n_dist = state
+        # --- select the W closest unvisited entries in the window --------
+        score = jnp.where(
+            (~pool_vis) & (pool_ids >= 0) & in_window, pool_dists, jnp.inf)
+        neg_top, sel_pos = jax.lax.top_k(-score, W)
+        sel_valid = jnp.isfinite(neg_top)
+        sel_ids = jnp.where(sel_valid, pool_ids[sel_pos], 0)
+        pool_vis = pool_vis.at[sel_pos].set(pool_vis[sel_pos] | sel_valid)
+        log = jax.lax.dynamic_update_slice(
+            log, jnp.where(sel_valid, sel_ids, -1).astype(jnp.int32),
+            (it * W,))
+
+        # --- expand adjacency rows (id table may be int16: shard-local
+        # slot ids fit 16 bits at production sharding — hillclimb C2) -----
+        nbrs = neighbors[sel_ids].astype(jnp.int32)            # (W, rcap)
+        cand = jnp.where(sel_valid[:, None], nbrs, -1).reshape(-1)  # (W*rcap,)
+
+        # dedup within the expansion (sort by id, kill equal-adjacent)
+        cs = jnp.sort(cand)
+        dup = jnp.concatenate([jnp.array([False]), cs[1:] == cs[:-1]])
+        cand = jnp.where(dup & (cs >= 0), -1, cs)
+
+        # dedup against pool
+        seen = jnp.any(
+            (cand[:, None] == pool_ids[None, :]) & (pool_ids >= 0)[None, :],
+            axis=1)
+        cand = jnp.where(seen, -1, cand)
+
+        # --- score survivors ---------------------------------------------
+        safe = jnp.clip(cand, 0, n - 1)
+        cd = jnp.where(cand >= 0, dist_fn(query, vectors[safe]), jnp.inf)
+        n_dist = n_dist + jnp.sum(cand >= 0)
+
+        # --- merge + keep best P -----------------------------------------
+        all_ids = jnp.concatenate([pool_ids, cand.astype(jnp.int32)])
+        all_dists = jnp.concatenate([pool_dists, cd])
+        all_vis = jnp.concatenate([pool_vis, jnp.zeros_like(cand, jnp.bool_)])
+        order = jnp.argsort(all_dists)[:P]
+        return (all_ids[order], all_dists[order], all_vis[order],
+                log, it + 1, n_dist)
+
+    init = (pool_ids, pool_dists, pool_vis, visited_log,
+            jnp.int32(0), jnp.int32(e))
+    pool_ids, pool_dists, pool_vis, visited_log, it, n_dist = (
+        jax.lax.while_loop(cond, body, init))
+    return SearchResult(pool_ids[:L], pool_dists[:L], visited_log, it, n_dist)
+
+
+def batch_beam_search(vectors, neighbors, queries, entry_ids, **kw):
+    """vmapped beam search: queries (B, d), entry_ids (B, E) or (E,)."""
+    if entry_ids.ndim == 1:
+        entry_ids = jnp.broadcast_to(entry_ids, (queries.shape[0],) + entry_ids.shape)
+    fn = functools.partial(beam_search, **kw)
+    return jax.vmap(fn, in_axes=(None, None, 0, 0))(
+        vectors, neighbors, queries, entry_ids)

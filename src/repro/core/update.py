@@ -1,0 +1,487 @@
+"""Batch update engines: Greator, FreshDiskANN, IP-DiskANN (paper Secs. 2.2/4/5).
+
+All three engines execute the same three-phase batch protocol
+(delete -> insert -> patch) against the same `GraphIndex`, differ only in the
+paper's axes of comparison, and charge their I/O to the shared simulator:
+
+====================  =======================  =====================  ==================
+                      FreshDiskANN [50]        IP-DiskANN [61]        Greator (ours)
+====================  =======================  =====================  ==================
+affected-vertex id    full index-file scan     per-delete ANN search  lightweight-topology scan
+delete repair         Algorithm 1 + prune      connect c nearest      ASNR (Algorithm 2)
+write strategy        out-of-place rebuild     localized pages        localized pages
+patch degree limit    strict R                 relaxed R'             relaxed R'
+====================  =======================  =====================  ==================
+
+Compute (distance evaluations, pruning) runs for real through the jitted
+search/prune primitives; disk behaviour is charged to the IOSimulator cost
+model (see storage.py).  Stats mirror the paper's figures: throughput
+(Fig. 8), read/write I/O (Fig. 9), prune trigger rates (Fig. 10).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from .deltag import DeltaG
+from .index import QUERY_FILE, TOPO_FILE, GraphIndex
+from .prune import batched_robust_prune
+from .repair import plan_repairs, rank_deleted_neighborhoods
+from .search import batch_beam_search
+from .storage import IOCounters
+
+
+@dataclass
+class BatchStats:
+    engine: str = ""
+    n_deletes: int = 0
+    n_inserts: int = 0
+    compute_s: float = 0.0
+    io_s: float = 0.0
+    topo_sync_s: float = 0.0
+    io: IOCounters = field(default_factory=IOCounters)
+    delete_repairs: int = 0
+    delete_prunes: int = 0
+    patch_updates: int = 0
+    patch_prunes: int = 0
+    n_dist: int = 0
+    topo_rows_synced: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.io_s + self.topo_sync_s
+
+    @property
+    def throughput(self) -> float:
+        return (self.n_deletes + self.n_inserts) / max(self.total_s, 1e-12)
+
+    @property
+    def delete_prune_rate(self) -> float:
+        return self.delete_prunes / max(self.delete_repairs, 1)
+
+    @property
+    def patch_prune_rate(self) -> float:
+        return self.patch_prunes / max(self.patch_updates, 1)
+
+
+@dataclass
+class EngineConfig:
+    L_build: int = 75            # insertion queue length (paper Sec. 7.1)
+    W: int = 4                   # beam width
+    alpha: float = 1.2
+    max_c: int = 96              # candidate cap for RobustPrune batches
+    T: int = 2                   # ASNR threshold (Greator default)
+    insert_chunk: int = 64       # batch-parallel insert chunk
+    ip_ld: int = 128             # IP-DiskANN delete-search queue length
+    ip_c: int = 3                # IP-DiskANN neighbors connected per repair
+    ip_cleanup_every: int = 0    # 0 = off (paper runs IP-DiskANN w/o scans)
+    strict_patch_limit: bool = False   # ablation: disable the relaxed R' 
+
+
+class _EngineBase:
+    name = "base"
+
+    def __init__(self, index: GraphIndex, cfg: EngineConfig | None = None):
+        self.index = index
+        self.cfg = cfg or EngineConfig()
+        self.batch_no = 0
+
+    # ------------------------------------------------------------------ API
+    def apply_batch(self, delete_ids: list[int],
+                    insert_items: list[tuple[int, np.ndarray]]) -> BatchStats:
+        idx = self.index
+        stats = BatchStats(engine=self.name, n_deletes=len(delete_ids),
+                           n_inserts=len(insert_items))
+        io0 = idx.io.snapshot()
+        idx.io.reset_cache()
+
+        t0 = time.perf_counter()
+        deleted_slots = self._delete_phase(delete_ids, stats)
+        self._insert_phase(insert_items, stats)
+        self._patch_phase(stats)
+        stats.compute_s = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        stats.topo_rows_synced = self._sync_topology()
+        stats.topo_sync_s = time.perf_counter() - t1
+
+        stats.io = idx.io.snapshot() - io0
+        stats.io_s = idx.io.cost.time(stats.io)
+        self.batch_no += 1
+        del deleted_slots
+        return stats
+
+    # ------------------------------------------------------------ helpers
+    def _sync_topology(self) -> int:
+        raise NotImplementedError
+
+    def _medoid_entries(self) -> np.ndarray:
+        return np.array([self.index.slot_of(self.index.entry_id)], np.int64)
+
+    def _charge_search_reads(self, visited: np.ndarray) -> None:
+        v = visited[visited >= 0]
+        self.index.io.rand_read(QUERY_FILE, self.index.page_of(v))
+
+    def _run_insert_searches(self, vecs: np.ndarray, stats: BatchStats):
+        """Batched beam search for insert candidate generation.  The query
+        batch is padded to a power-of-two bucket (one compile per bucket)."""
+        idx = self.index
+        dev_vecs, dev_nbrs = idx.device_arrays()
+        entry = jnp.asarray(self._medoid_entries(), jnp.int32)
+        B = len(vecs)
+        Bp = 1 << (B - 1).bit_length()
+        vpad = np.zeros((Bp, vecs.shape[1]), np.float32)
+        vpad[:B] = vecs
+        res = batch_beam_search(
+            dev_vecs, dev_nbrs, jnp.asarray(vpad), entry,
+            L=self.cfg.L_build, W=self.cfg.W, metric=idx.params.metric)
+        stats.n_dist += int(np.sum(np.asarray(res.n_dist[:B])))
+        visited = np.asarray(res.visited)[:B]
+        for b in range(B):
+            self._charge_search_reads(visited[b])
+        return res._replace(ids=res.ids[:B], dists=res.dists[:B],
+                            visited=res.visited[:B])
+
+    def _prune_batch(self, items: list[tuple[int, np.ndarray]],
+                     alpha: float, stats: BatchStats) -> list[tuple[int, np.ndarray]]:
+        """Run RobustPrune over (slot, candidates) items in one vmapped call.
+
+        Candidates beyond max_c are truncated (nearest-first ordering is NOT
+        guaranteed here; DiskANN truncates the candidate list at MAX_C too).
+        The batch dim is padded to the next power of two so the jitted prune
+        compiles once per bucket, not once per batch size.
+        Returns (slot, new_neighbor_row) pairs.
+        """
+        if not items:
+            return []
+        idx = self.index
+        C = self.cfg.max_c
+        B = len(items)
+        Bp = 1 << (B - 1).bit_length()          # shape bucket
+        cand = np.full((Bp, C), -1, np.int32)
+        pv = np.zeros((Bp, idx.params.dim), np.float32)
+        for i, (slot, cands) in enumerate(items):
+            cands = np.unique(cands[cands >= 0])[:C]
+            cand[i, :len(cands)] = cands
+            pv[i] = idx.vectors[slot]
+        cvecs = idx.vectors[np.maximum(cand, 0)]
+        res = batched_robust_prune(
+            jnp.asarray(pv), jnp.asarray(cand), jnp.asarray(cvecs),
+            alpha, R=idx.params.R, metric=idx.params.metric)
+        stats.n_dist += int(np.sum(np.asarray(res.n_dist[:B])))
+        kept = np.asarray(res.ids)
+        return [(items[i][0], kept[i]) for i in range(B)]
+
+    def _insert_phase(self, insert_items, stats) -> None:
+        """Shared insert phase (paper Sec. 2.2: identical for all systems up
+        to where the write lands — localized page vs in-memory Delta)."""
+        idx = self.index
+        ck = self.cfg.insert_chunk
+        C = self.cfg.max_c
+        for i in range(0, len(insert_items), ck):
+            chunk = insert_items[i:i + ck]
+            vecs = np.stack([v for _, v in chunk]).astype(np.float32)
+            res = self._run_insert_searches(vecs, stats)
+            visited = np.asarray(res.visited)
+            B = len(chunk)
+            cand = np.full((B, C), -1, np.int32)
+            for b in range(B):
+                vs = visited[b]
+                vs = np.unique(vs[vs >= 0])[:C]
+                cand[b, :len(vs)] = vs
+            cvecs = idx.vectors[np.maximum(cand, 0)]
+            pres = batched_robust_prune(
+                jnp.asarray(vecs), jnp.asarray(cand), jnp.asarray(cvecs),
+                self.cfg.alpha, R=idx.params.R, metric=idx.params.metric)
+            stats.n_dist += int(np.sum(np.asarray(pres.n_dist)))
+            kept = np.asarray(pres.ids)
+            for b, (vid, vec) in enumerate(chunk):
+                slot = idx.allocate_slot(vid)
+                nbrs = kept[b][kept[b] >= 0]
+                nbrs = nbrs[nbrs != slot]
+                idx.write_vertex(slot, vec, nbrs)
+                if self.localized_writes:
+                    # write the new vertex's page (Free_Q slot or appended)
+                    idx.io.rand_write(QUERY_FILE, [int(idx.page_of(slot))])
+                for nb in nbrs:
+                    self._stage_reverse_edge(int(nb), slot)
+            idx.invalidate_device()
+
+    # phases/hooks implemented by subclasses
+    localized_writes = True
+
+    def _stage_reverse_edge(self, src_slot: int, new_nbr: int) -> None:
+        raise NotImplementedError
+
+    def _delete_phase(self, delete_ids, stats) -> np.ndarray:
+        raise NotImplementedError
+
+    def _patch_phase(self, stats) -> None:
+        raise NotImplementedError
+
+
+# ===========================================================================
+class GreatorEngine(_EngineBase):
+    """The paper's system: topology scan + localized pages + ASNR + R'."""
+
+    name = "greator"
+    repair_mode = "asnr"
+    patch_limit_attr = "R_relaxed"
+    localized_writes = True
+
+    def __init__(self, index, cfg=None):
+        super().__init__(index, cfg)
+        self.deltag = DeltaG()
+
+    # ---------------------------------------------------------------- delete
+    def _delete_phase(self, delete_ids, stats) -> np.ndarray:
+        idx = self.index
+        if not delete_ids:
+            return np.empty((0,), np.int64)
+        deleted_slots = np.array(
+            [idx.release_slot(v) for v in delete_ids], np.int64)
+        deleted_set = set(int(s) for s in deleted_slots)
+
+        # (1) identify affected vertices from the LIGHTWEIGHT TOPOLOGY —
+        #     sequential scan of the topology file only: O(|G|) bytes.
+        idx.io.seq_read(idx.topo_bytes())
+        n = idx.slots_in_use
+        hit = np.isin(idx.topo_neighbors[:n], deleted_slots).any(axis=1)
+        affected = np.flatnonzero(hit & idx.alive[:n])
+
+        # (2) localized page reads: only pages holding affected vertices.
+        idx.io.rand_read(QUERY_FILE, idx.page_of(affected))
+
+        # (3) repair: ASNR (Algorithm 2) with threshold T.
+        ranked = rank_deleted_neighborhoods(
+            idx.vectors, idx.neighbors, deleted_slots, deleted_set)
+        plan = plan_repairs(
+            affected_slots=affected, neighbors=idx.neighbors,
+            deleted_set=deleted_set, ranked=ranked, R=idx.params.R,
+            mode=self.repair_mode, T=self.cfg.T, dim=idx.params.dim)
+        stats.delete_repairs += plan.n_repairs
+        stats.delete_prunes += plan.n_prune_triggers
+        stats.n_dist += plan.n_dist
+        for slot, row in plan.direct:
+            idx.set_neighbors(slot, row)
+        for slot, row in self._prune_batch(plan.prune, self.cfg.alpha, stats):
+            idx.set_neighbors(slot, row)
+
+        # (4) write the modified pages back (localized).
+        idx.io.rand_write(QUERY_FILE, idx.page_of(affected))
+        idx.invalidate_device()
+        return deleted_slots
+
+    # ------------------------------------------------- insert hook: ΔG cache
+    def _stage_reverse_edge(self, src_slot: int, new_nbr: int) -> None:
+        self.deltag.add_reverse_edge(
+            src_slot, int(self.index.page_of(src_slot)), new_nbr)
+
+    # ----------------------------------------------------------------- patch
+    def _patch_phase(self, stats) -> None:
+        idx = self.index
+        limit = idx.params.R if self.cfg.strict_patch_limit \
+            else getattr(idx.params, self.patch_limit_attr)
+        to_prune: list[tuple[int, np.ndarray]] = []
+        for page_id, vertex_tbl in self.deltag.pages():
+            idx.io.rand_read(QUERY_FILE, [page_id])
+            for slot, new_edges in vertex_tbl.items():
+                if not idx.alive[slot]:
+                    continue  # vertex deleted after edge was staged
+                stats.patch_updates += 1
+                cur = idx.get_neighbors(slot)
+                merged = np.unique(np.concatenate(
+                    [cur, np.fromiter(new_edges, np.int32)]))
+                merged = merged[(merged >= 0) & (merged != slot)]
+                # drop edges to dead slots
+                merged = merged[idx.alive[merged]]
+                if len(merged) > limit:
+                    # RELAXED limit exceeded -> prune back to strict R
+                    stats.patch_prunes += 1
+                    to_prune.append((slot, merged))
+                else:
+                    idx.set_neighbors(slot, merged)
+            idx.io.rand_write(QUERY_FILE, [page_id])
+        for slot, row in self._prune_batch(to_prune, self.cfg.alpha, stats):
+            idx.set_neighbors(slot, row)
+        self.deltag.clear()
+        idx.invalidate_device()
+
+    def _sync_topology(self) -> int:
+        return self.index.sync_topology(charge_io=True)
+
+
+# ===========================================================================
+class FreshDiskANNEngine(_EngineBase):
+    """Baseline [50]: full scans, Algorithm 1 repairs, strict R, rebuild."""
+
+    name = "freshdiskann"
+    localized_writes = False   # inserts land via the patch-phase full rewrite
+
+    def __init__(self, index, cfg=None):
+        super().__init__(index, cfg)
+        self.delta: dict[int, set[int]] = {}
+
+    def _stage_reverse_edge(self, src_slot: int, new_nbr: int) -> None:
+        # plain in-memory Delta, not page-aware
+        self.delta.setdefault(int(src_slot), set()).add(int(new_nbr))
+
+    # ---------------------------------------------------------------- delete
+    def _delete_phase(self, delete_ids, stats) -> np.ndarray:
+        idx = self.index
+        if not delete_ids:
+            return np.empty((0,), np.int64)
+        deleted_slots = np.array(
+            [idx.release_slot(v) for v in delete_ids], np.int64)
+        deleted_set = set(int(s) for s in deleted_slots)
+
+        # full sequential scan of the COUPLED index file: O(|X|+|G|) read.
+        idx.io.seq_read(idx.file_bytes())
+        n = idx.slots_in_use
+        hit = np.isin(idx.neighbors[:n], deleted_slots).any(axis=1)
+        affected = np.flatnonzero(hit & idx.alive[:n])
+
+        # Algorithm 1 repairs (always the naive candidate expansion).
+        ranked = rank_deleted_neighborhoods(
+            idx.vectors, idx.neighbors, deleted_slots, deleted_set)
+        plan = plan_repairs(
+            affected_slots=affected, neighbors=idx.neighbors,
+            deleted_set=deleted_set, ranked=ranked, R=idx.params.R,
+            mode="naive", dim=idx.params.dim)
+        stats.delete_repairs += plan.n_repairs
+        stats.delete_prunes += plan.n_prune_triggers
+        stats.n_dist += plan.n_dist
+        for slot, row in plan.direct:
+            idx.set_neighbors(slot, row)
+        for slot, row in self._prune_batch(plan.prune, self.cfg.alpha, stats):
+            idx.set_neighbors(slot, row)
+
+        # modified blocks stream to the temporary intermediate file.
+        idx.io.seq_write(
+            len(np.unique(idx.page_of(affected))) * 4096)
+        idx.invalidate_device()
+        return deleted_slots
+
+    # ----------------------------------------------------------------- patch
+    def _patch_phase(self, stats) -> None:
+        idx = self.index
+        # full scan of the temp file + full rewrite of the new index file.
+        idx.io.seq_read(idx.file_bytes())
+        idx.io.seq_write(idx.file_bytes())
+        to_prune: list[tuple[int, np.ndarray]] = []
+        for slot, new_edges in sorted(self.delta.items()):
+            if not idx.alive[slot]:
+                continue
+            stats.patch_updates += 1
+            cur = idx.get_neighbors(slot)
+            merged = np.unique(np.concatenate(
+                [cur, np.fromiter(new_edges, np.int32)]))
+            merged = merged[(merged >= 0) & (merged != slot)]
+            merged = merged[idx.alive[merged]]
+            if len(merged) > idx.params.R:      # STRICT limit
+                stats.patch_prunes += 1
+                to_prune.append((slot, merged))
+            else:
+                idx.set_neighbors(slot, merged)
+        for slot, row in self._prune_batch(to_prune, self.cfg.alpha, stats):
+            idx.set_neighbors(slot, row)
+        self.delta.clear()
+        idx.invalidate_device()
+
+    def _sync_topology(self) -> int:
+        # FreshDiskANN has no separate topology file; the full rewrite above
+        # already persisted everything.
+        self.index.sync_topology(charge_io=False)
+        return 0
+
+
+# ===========================================================================
+class IPDiskANNEngine(GreatorEngine):
+    """Baseline [61] reproduced on Greator's localized update substrate
+    (as the paper does): search-based in-neighbor discovery, connect the
+    c nearest neighbors of each deleted vertex, strict-R delete pruning.
+    Inherits Greator's insert/patch (localized pages, ΔG, relaxed R')."""
+
+    name = "ipdiskann"
+
+    def _delete_phase(self, delete_ids, stats) -> np.ndarray:
+        idx = self.index
+        cfg = self.cfg
+        if not delete_ids:
+            return np.empty((0,), np.int64)
+        # snapshot device arrays BEFORE releasing, searches need the vectors
+        del_vecs = np.stack([
+            idx.vectors[idx.slot_of(v)] for v in delete_ids]).astype(np.float32)
+        deleted_slots = np.array(
+            [idx.release_slot(v) for v in delete_ids], np.int64)
+        deleted_set = set(int(s) for s in deleted_slots)
+
+        # (1) in-neighbor discovery: ANN search around each deleted vector
+        #     (l_d queue) — random reads, no full scan, but much more search
+        #     I/O than a topology scan.
+        dev_vecs, dev_nbrs = idx.device_arrays()
+        entry = jnp.asarray(self._medoid_entries(), jnp.int32)
+        B = len(del_vecs)
+        Bp = 1 << (B - 1).bit_length()
+        vpad = np.zeros((Bp, del_vecs.shape[1]), np.float32)
+        vpad[:B] = del_vecs
+        res = batch_beam_search(
+            dev_vecs, dev_nbrs, jnp.asarray(vpad), entry,
+            L=cfg.ip_ld, W=cfg.W, metric=idx.params.metric)
+        stats.n_dist += int(np.sum(np.asarray(res.n_dist[:B])))
+        visited = np.asarray(res.visited)
+
+        ranked = rank_deleted_neighborhoods(
+            idx.vectors, idx.neighbors, deleted_slots, deleted_set)
+
+        to_prune: list[tuple[int, np.ndarray]] = []
+        repaired: set[int] = set()
+        for b, v in enumerate(deleted_slots):
+            self._charge_search_reads(visited[b])
+            cands = visited[b]
+            cands = np.unique(cands[cands >= 0])
+            # in-neighbors among the visited candidates (their rows are in
+            # the pages the search already read)
+            inn = cands[(idx.neighbors[cands] == v).any(axis=1)
+                        & idx.alive[cands]]
+            repl = ranked.get(int(v), np.empty(0, np.int32))[:cfg.ip_c]
+            for p in inn:
+                p = int(p)
+                if p in repaired:
+                    pass  # may be repaired for several deleted vertices
+                stats.delete_repairs += not (p in repaired)
+                repaired.add(p)
+                row = idx.get_neighbors(p)
+                row = row[[int(x) not in deleted_set for x in row]] \
+                    if len(row) else row
+                merged = np.unique(np.concatenate(
+                    [row.astype(np.int32), repl.astype(np.int32)]))
+                merged = merged[(merged >= 0) & (merged != p)]
+                merged = merged[idx.alive[merged]]
+                stats.n_dist += len(repl)
+                if len(merged) > idx.params.R:   # strict limit -> prune
+                    stats.delete_prunes += 1
+                    to_prune.append((p, merged))
+                else:
+                    idx.set_neighbors(p, merged)
+        for slot, row in self._prune_batch(to_prune, self.cfg.alpha, stats):
+            idx.set_neighbors(slot, row)
+        rep = np.array(sorted(repaired), np.int64)
+        if len(rep):
+            idx.io.rand_write(QUERY_FILE, idx.page_of(rep))
+        # NOTE: unfound in-neighbors keep dangling edges; the paper notes
+        # IP-DiskANN requires periodic full scans to clear them.
+        if cfg.ip_cleanup_every and (self.batch_no + 1) % cfg.ip_cleanup_every == 0:
+            idx.io.seq_read(idx.file_bytes())
+        idx.invalidate_device()
+        return deleted_slots
+
+
+ENGINES = {
+    "greator": GreatorEngine,
+    "freshdiskann": FreshDiskANNEngine,
+    "ipdiskann": IPDiskANNEngine,
+}

@@ -1,0 +1,2 @@
+from .vectors import (DATASET_DIMS, UpdateBatch, dataset, streaming_workload,
+                      synthetic_vectors)

@@ -1,0 +1,3 @@
+from .collectives import (compressed_psum, dequantize_int8,
+                          init_error_feedback, quantize_int8,
+                          tree_compressed_psum)

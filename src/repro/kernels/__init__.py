@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot spots (distance math).
+
+Each kernel ships as <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with ops.py as the jit'd dispatch wrapper and ref.py as the
+pure-jnp oracle the tests assert against (interpret mode on CPU).
+"""
+from .ops import gather_distance, pairwise_distance
+
+__all__ = ["gather_distance", "pairwise_distance"]

@@ -1,0 +1,80 @@
+"""Scalar-prefetch gather-distance kernel (Pallas, TPU).
+
+Beam-search expansion (paper Sec. 2.1 / our core/search.py) repeatedly needs
+dist(query_b, vectors[idx[b, k]]) for a small, data-dependent candidate set —
+on disk this is the paper's random 4 KB page read; on TPU the analogue is an
+HBM->VMEM gather.  A naive jnp take materialises the (B, K, d) gather in HBM;
+this kernel instead uses PrefetchScalarGridSpec so the candidate indices are
+prefetched into SMEM and *drive the BlockSpec index_map directly*: block (b,k)
+DMAs row idx[b,k] from the vector table in HBM straight into VMEM, computes
+the fused squared-L2 against the query row, and writes one scalar-tile out.
+No (B,K,d) intermediate ever exists.
+
+Grid: (B, K/bk) — each step gathers bk rows via a vector of row-blocks.  We
+gather one row per grid step (bk=1 rows of shape (1, d)) which keeps the DMA
+descriptor simple and lets the d dimension stay the natural VMEM lane layout.
+For d not a multiple of 128 the wrapper zero-pads (exact for L2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, q_ref, v_ref, o_ref):
+    """Grid (B, K): block = one (1, d) gathered row vs one (1, d) query row."""
+    q = q_ref[...].astype(jnp.float32)            # (1, d)
+    v = v_ref[...].astype(jnp.float32)            # (1, d)  = vectors[idx[b,k]]
+    diff = q - v
+    o_ref[0, 0] = jnp.sum(diff * diff)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_dist(
+    query: jnp.ndarray,
+    vectors: jnp.ndarray,
+    idx: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """query (B, d), vectors (N, d), idx (B, K) int32 -> (B, K) float32.
+
+    Negative indices mark padding and return +inf (matches ref.gather_sq_l2).
+    """
+    b, d = query.shape
+    n, d2 = vectors.shape
+    assert d == d2
+    bk, kk = idx.shape
+    assert bk == b
+
+    dp = _round_up(d, 128)
+    qpad = jnp.pad(query, ((0, 0), (0, dp - d)))
+    vpad = jnp.pad(vectors, ((0, 0), (0, dp - d)))
+    flat_idx = jnp.maximum(idx.reshape(-1), 0).astype(jnp.int32)   # (B*K,)
+
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, kk),
+            in_specs=[
+                # query row b
+                pl.BlockSpec((1, dp), lambda i, j, idx_pf: (i, 0)),
+                # gathered vector row idx[b, k] — index_map reads the
+                # prefetched scalars
+                pl.BlockSpec((1, dp), lambda i, j, idx_pf: (idx_pf[i * kk + j], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1), lambda i, j, idx_pf: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kk), jnp.float32),
+        interpret=interpret,
+    )(flat_idx, qpad, vpad)
+    return jnp.where(idx < 0, jnp.inf, out)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult

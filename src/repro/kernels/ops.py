@@ -1,0 +1,38 @@
+"""Public jit'd entry points for the kernels package.
+
+`backend="ref"` (default on CPU) dispatches to the pure-jnp oracle — it is
+numerically identical and fast under XLA:CPU.  `backend="pallas"` runs the
+Pallas kernel (interpret=True on CPU; compiled on real TPU).  The ANN engine
+takes these through core/*, so swapping backends is a one-line config change.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .gather_dist import gather_dist as _gather_pallas
+from .pairwise_dist import pairwise_dist as _pairwise_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def pairwise_distance(x: jnp.ndarray, y: jnp.ndarray, *,
+                      metric: str = "sq_l2",
+                      backend: str = "ref") -> jnp.ndarray:
+    """(M,d) x (N,d) -> (M,N) distance matrix (smaller = closer)."""
+    if backend == "pallas":
+        return _pairwise_pallas(x, y, metric=metric, interpret=not _ON_TPU)
+    if metric == "sq_l2":
+        return ref.pairwise_sq_l2(x, y)
+    if metric == "ip":
+        return ref.pairwise_ip(x, y)
+    raise ValueError(metric)
+
+
+def gather_distance(query: jnp.ndarray, vectors: jnp.ndarray,
+                    idx: jnp.ndarray, *, backend: str = "ref") -> jnp.ndarray:
+    """query (B,d), vectors (N,d), idx (B,K) -> (B,K) sq-L2; idx<0 -> +inf."""
+    if backend == "pallas":
+        return _gather_pallas(query, vectors, idx, interpret=not _ON_TPU)
+    return ref.gather_sq_l2(query, vectors, idx)

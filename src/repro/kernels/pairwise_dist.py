@@ -1,0 +1,105 @@
+"""Tiled pairwise squared-L2 / inner-product distance kernel (Pallas, TPU).
+
+The compute hot spot of the paper's update path is distance evaluation:
+RobustPrune is O(|C|^2 * d) pairwise distances and ASNR is O(|D| * R * d)
+(Sec. 5.2).  On TPU both reduce to an MXU matmul: the squared-L2 matrix is
+||x||^2 - 2 x.y^T + ||y||^2, so the kernel streams (bm, d) x (bn, d) tiles
+through VMEM, accumulates x.y^T on the MXU in fp32 over d-tiles, and fuses the
+norm/epilogue into the last tile — one HBM pass over each operand tile.
+
+Grid: (M/bm, N/bn, d/bk), d innermost so the fp32 accumulator tile lives in
+VMEM across the contraction (standard matmul revisiting pattern).  Block sizes
+default to (128, 128, 512): MXU-aligned (multiples of 128 in the matmul dims)
+and a working set of bm*bk + bn*bk + bm*bn fp32 words ~= 0.6 MB << 16 MB VMEM,
+leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pairwise_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int, metric: str):
+    """One (bm, bn) output tile; accumulates over the d (grid axis 2) tiles."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bm, bk)
+    y = y_ref[...].astype(jnp.float32)          # (bn, bk)
+    # MXU contraction for this d-tile.
+    acc = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    if metric == "sq_l2":
+        # Fold the norm terms in tile-by-tile as rank-1 updates so no extra
+        # HBM pass over x/y is needed:  acc = x.y^T - (||x||^2 + ||y||^2)/2,
+        # epilogue multiplies by -2.
+        x2 = jnp.sum(x * x, axis=1, keepdims=True)       # (bm, 1)
+        y2 = jnp.sum(y * y, axis=1, keepdims=True).T     # (1, bn)
+        acc = acc - 0.5 * (x2 + y2)
+    acc_ref[...] += acc
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        if metric == "sq_l2":
+            o_ref[...] = jnp.maximum(-2.0 * acc_ref[...], 0.0)
+        else:  # negative inner product
+            o_ref[...] = -acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "bm", "bn", "bk", "interpret"),
+)
+def pairwise_dist(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    metric: str = "sq_l2",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pairwise distance matrix via the Pallas kernel.
+
+    x: (M, d), y: (N, d) -> (M, N) float32.  Pads every dim up to the block
+    grid; zero-padding along d is exact for both metrics, padded rows/cols are
+    sliced off.
+    """
+    assert metric in ("sq_l2", "ip"), metric
+    m, d = x.shape
+    n, d2 = y.shape
+    assert d == d2, (x.shape, y.shape)
+
+    bm_ = min(bm, _round_up(m, 8))
+    bn_ = min(bn, _round_up(n, 128))
+    bk_ = min(bk, _round_up(d, 128))
+    mp, np_, dp = _round_up(m, bm_), _round_up(n, bn_), _round_up(d, bk_)
+    xpad = jnp.pad(x, ((0, mp - m), (0, dp - d)))
+    ypad = jnp.pad(y, ((0, np_ - n), (0, dp - d)))
+    n_k = dp // bk_
+
+    out = pl.pallas_call(
+        functools.partial(_pairwise_kernel, n_k=n_k, metric=metric),
+        grid=(mp // bm_, np_ // bn_, n_k),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn_, bk_), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(xpad, ypad)
+    return out[:m, :n]
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth used by the per-kernel allclose tests and by the
+CPU execution path of the ANN engine (interpret-mode Pallas is too slow for
+the benchmark loops; the oracles are numerically identical).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_l2(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distance matrix.
+
+    x: (M, d), y: (N, d)  ->  (M, N) float32.
+    Uses the ||x||^2 - 2<x,y> + ||y||^2 expansion (the same decomposition the
+    kernel uses so tolerances stay tight).
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (M, 1)
+    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T        # (1, N)
+    xy = x @ y.T                                          # (M, N)
+    d = x2 - 2.0 * xy + y2
+    return jnp.maximum(d, 0.0)
+
+
+def pairwise_ip(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Negative inner product ("distance" so that smaller = closer)."""
+    return -(x.astype(jnp.float32) @ y.astype(jnp.float32).T)
+
+
+def gather_sq_l2(query: jnp.ndarray, vectors: jnp.ndarray,
+                 idx: jnp.ndarray) -> jnp.ndarray:
+    """Distances from each row of `query` to `vectors[idx[i]]` rows.
+
+    query:   (B, d)
+    vectors: (N, d)
+    idx:     (B, K) int32 — indices into vectors; negative = padding
+             (distance reported as +inf).
+    returns  (B, K) float32.
+    """
+    safe = jnp.maximum(idx, 0)
+    g = vectors[safe]                                     # (B, K, d)
+    q = query[:, None, :].astype(jnp.float32)
+    d = jnp.sum((g.astype(jnp.float32) - q) ** 2, axis=-1)
+    return jnp.where(idx < 0, jnp.inf, d)

@@ -1,0 +1,89 @@
+"""Dry-run cell for the paper's own workload: distributed ANN search over
+the production mesh (the `ann` roofline row).
+
+1M vectors (SIFT-scale, d=128) row-sharded over the DP axes; a replicated
+query batch fans out, every shard runs the jitted beam search on its slice,
+and one all-gather merges per-shard top-k.  This is the serving-path
+analogue of the paper's system at pod scale and the cell the
+paper-representative hillclimb iterates on (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharded_index import make_distributed_search
+
+
+@dataclass(frozen=True)
+class AnnShape:
+    name: str
+    n_vectors: int
+    dim: int
+    batch: int
+    L: int = 96
+    W: int = 4
+    k: int = 10
+    rcap: int = 32
+    int8: bool = False   # hillclimb C1: quantized vector rows
+    idx16: bool = False  # hillclimb C2: int16 shard-local neighbor ids
+
+
+ANN_SHAPES = {
+    "search_1m": AnnShape("search_1m", 1_048_576, 128, 256),
+    "search_16m_gist": AnnShape("search_16m_gist", 16_777_216, 960, 64,
+                                L=96),
+    "search_1m_q8": AnnShape("search_1m_q8", 1_048_576, 128, 256,
+                             int8=True),
+    "search_16m_gist_q8": AnnShape("search_16m_gist_q8", 16_777_216, 960,
+                                   64, int8=True),
+    "search_1m_q8i16": AnnShape("search_1m_q8i16", 1_048_576, 128, 256,
+                                int8=True, idx16=True),
+    "search_16m_gist_q8i16": AnnShape("search_16m_gist_q8i16", 16_777_216,
+                                      960, 64, int8=True, idx16=True),
+}
+
+
+def ann_cell_args(shape: AnnShape, mesh, *, dtype=jnp.bfloat16):
+    if shape.int8:
+        dtype = jnp.int8
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in dp]))
+    P = jax.sharding.PartitionSpec
+    vspec = jax.sharding.NamedSharding(mesh, P(dp, None))
+    sds = jax.ShapeDtypeStruct
+    vectors = sds((shape.n_vectors, shape.dim), dtype, sharding=vspec)
+    idx_dtype = jnp.int16 if shape.idx16 else jnp.int32
+    neighbors = sds((shape.n_vectors, shape.rcap), idx_dtype, sharding=vspec)
+    entries = sds((n_shards,), jnp.int32,
+                  sharding=jax.sharding.NamedSharding(mesh, P(dp)))
+    queries = sds((shape.batch, shape.dim), jnp.bfloat16,
+                  sharding=jax.sharding.NamedSharding(mesh, P(None, None)))
+    fn = make_distributed_search(
+        mesh, L=shape.L, W=shape.W, k=shape.k,
+        vec_scale=(1.0 / 32.0) if shape.int8 else None)
+    return fn, (vectors, neighbors, entries, queries)
+
+
+def ann_analytic(shape: AnnShape, n_chips: int):
+    """Analytic roofline terms for the fan-out search.
+
+    Every shard evaluates every query against its slice: per query a beam
+    search visits ~L*W vertices, scoring rcap neighbors each (dedup keeps
+    ~60%), so dists ~= 0.6 * L * W * rcap.  Each distance reads one d-dim
+    vector from HBM (the gather IS the workload — the paper's random 4 KB
+    page read, here an HBM row).  Compute: 2d FLOPs per distance plus the
+    O(P log P) sort overhead folded into a 1.3 factor.
+    """
+    dists = 0.6 * shape.L * shape.W * shape.rcap
+    itemsize = 1 if shape.int8 else 2
+    idx_bytes = 2 if shape.idx16 else 4
+    flops = shape.batch * dists * 2 * shape.dim * 1.3   # per device!
+    hbm = shape.batch * dists * (shape.dim * itemsize
+                                 + shape.rcap * idx_bytes)
+    # collective: all-gather of (S, B, k) ids+dists
+    coll = n_chips * shape.batch * shape.k * 8
+    return flops, hbm, coll

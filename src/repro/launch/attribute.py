@@ -1,0 +1,66 @@
+"""Collective-traffic attribution: execution-weighted bytes per op_name.
+
+The perf-iteration microscope: given a compiled cell, ranks collective ops
+by (wire bytes x loop-trip multiplier) with their jaxpr-level op_name so a
+hypothesis can name the exact model component responsible.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from . import hlo_parse as hp
+
+
+def attribute_collectives(hlo_text: str, top: int = 15):
+    comps = hp.parse_computations(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = hp._COMP_START.match(line.strip())
+            if m:
+                entry = m.group(1)
+    rev = defaultdict(list)
+    for c in comps:
+        for callee, k in hp._call_edges(comps[c]):
+            if callee in comps:
+                rev[callee].append((c, k))
+    memo: dict[str, float] = {}
+
+    def mult_of(c):
+        if c == entry:
+            return 1.0
+        if c in memo:
+            return memo[c]
+        memo[c] = 0.0
+        memo[c] = sum(mult_of(cl) * k for cl, k in rev[c])
+        return memo[c]
+
+    agg = defaultdict(float)
+    for cname, lines in comps.items():
+        m = mult_of(cname)
+        if m == 0:
+            continue
+        for s in lines:
+            mm = re.search(
+                r"\s(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                r"collective-permute)(-start)?\(", s)
+            if not mm:
+                continue
+            rs = hp._RESULT_SHAPE.search(s)
+            if not rs:
+                continue
+            rb = hp._shape_bytes(rs.group(1), rs.group(2))
+            wb = hp._wire_bytes(mm.group(1), rb, hp._group_size(s))
+            meta = re.search(r'op_name="([^"]*)"', s)
+            name = meta.group(1) if meta else "?"
+            # keep the tail of the op_name path (most specific)
+            key = (mm.group(1) + " " + rs.group(0)[2:26] + " | "
+                   + "/".join(name.split("/")[-3:])[:70])
+            agg[key] += wb * m
+    return sorted(agg.items(), key=lambda kv: -kv[1])[:top]
+
+
+def print_attribution(hlo_text: str, top: int = 15) -> None:
+    for k, v in attribute_collectives(hlo_text, top):
+        print(f"{v / 1e9:9.1f} GB  {k}")

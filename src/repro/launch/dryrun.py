@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks
+# the device count at first backend init.  512 host devices back the
+# production meshes: 16x16 single-pod and 2x16x16 multi-pod.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, get_config              # noqa: E402
+from repro.configs.base import (ModelConfig, ShapeConfig,  # noqa: E402
+                                TrainConfig, param_count, shapes_for)
+from repro.launch import flops as flops_mod              # noqa: E402
+from repro.launch.hlo_parse import collective_report     # noqa: E402
+from repro.launch.mesh import (HBM_BYTES, HBM_BW, ICI_BW,  # noqa: E402
+                               PEAK_FLOPS_BF16, make_production_mesh)
+from repro.models import abstract_params, get_model      # noqa: E402
+from repro.models.sharding import (attach, batch_shardings,  # noqa: E402
+                                   cache_shardings, params_shardings)
+from repro.train import get_optimizer, make_train_step   # noqa: E402
+from repro.train.loop import TrainState                  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _microbatches(cfg: ModelConfig) -> int:
+    # sized so per-device tokens/microbatch ~ 8k: remat carries (L x B_loc x
+    # T x D) dominate train memory otherwise
+    total, _ = param_count(cfg)
+    return 8 if total >= 8e9 else 4
+
+
+def _to_bf16(tree):
+    """Serving uses bf16 weights (halves HBM; decode is memory-bound)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        tree)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               *, microbatches: int | None = None):
+    """Returns (step_fn, example_args, donate) for the cell."""
+    api = get_model(cfg)
+    aparams = abstract_params(api)
+    serving = shape.kind != "train"
+    if serving:
+        aparams = _to_bf16(aparams)
+    pshard = params_shardings(cfg, mesh, aparams, serving=serving)
+    aparams = attach(aparams, pshard)
+    bspec = api.batch_spec(shape)
+    bshard = batch_shardings(cfg, mesh, bspec)
+    abatch = attach(bspec, bshard)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(microbatches=microbatches or _microbatches(cfg))
+        opt = get_optimizer(cfg.optimizer, tcfg)
+        aopt = jax.eval_shape(opt.init, aparams)
+        oshard = params_shardings(cfg, mesh, aopt)
+        aopt = attach(aopt, oshard)
+        astep = jax.ShapeDtypeStruct(
+            (), jnp.int32,
+            sharding=jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()))
+        astate = TrainState(aparams, aopt, astep)
+        step_fn = make_train_step(api.loss, opt, tcfg,
+                                  grad_shardings=pshard)
+        return step_fn, (astate, abatch), (0,)
+
+    from repro.models.layers import serving_mode
+
+    if shape.kind == "prefill":
+        def prefill_serving(params, batch):
+            with serving_mode():
+                return api.prefill_step(params, batch)
+        return prefill_serving, (aparams, abatch), ()
+
+    acache = jax.eval_shape(
+        lambda: api.init_cache(shape.global_batch, shape.seq_len))
+    cshard = cache_shardings(cfg, mesh, acache, shape)
+    acache = attach(acache, cshard)
+
+    def decode_serving(params, cache, batch):
+        with serving_mode():
+            return api.decode_step(params, cache, batch)
+    return decode_serving, (aparams, acache, abatch), (1,)
+
+
+def run_ann_cell(shape_name: str, multi_pod: bool) -> dict:
+    """The paper's own workload as a roofline row: distributed fan-out
+    search over the production mesh (launch/ann_cell.py)."""
+    from repro.launch.ann_cell import ANN_SHAPES, ann_analytic, ann_cell_args
+    shape = ANN_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec = {"arch": "ann", "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_chips": n_chips, "kind": "search", "ok": False}
+    t0 = time.time()
+    try:
+        fn, args = ann_cell_args(shape, mesh)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(fn).lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        coll = collective_report(compiled.as_text())
+        flops_dev, hbm_dev, coll_analytic = ann_analytic(shape, n_chips)
+        compute_t = flops_dev / PEAK_FLOPS_BF16
+        memory_t = hbm_dev / HBM_BW
+        coll_t = max(coll["total"], coll_analytic) / ICI_BW
+        terms = {"compute_s": compute_t, "memory_s": memory_t,
+                 "collective_s": coll_t}
+        per_dev = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                   + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+        rec.update(
+            ok=True,
+            memory=dict(per_device_bytes=per_dev,
+                        temp_bytes=mem.temp_size_in_bytes,
+                        fits_hbm=bool(per_dev <= HBM_BYTES),
+                        hbm_frac=round(per_dev / HBM_BYTES, 3)),
+            collectives={k: round(v, 1) if isinstance(v, float) else v
+                         for k, v in coll.items()},
+            analytic=dict(flops_total=flops_dev * n_chips,
+                          model_flops_total=flops_dev * n_chips,
+                          hbm_bytes_total=hbm_dev * n_chips,
+                          param_bytes=0.0, cache_bytes=0.0),
+            roofline=dict(compute_ms=round(compute_t * 1e3, 4),
+                          memory_ms=round(memory_t * 1e3, 4),
+                          collective_ms=round(coll_t * 1e3, 4),
+                          dominant=max(terms, key=terms.get).replace(
+                              "_s", ""),
+                          useful_ratio=1.0),
+        )
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             *, keep_hlo: bool = False, cfg_overrides: dict | None = None,
+             microbatches: int | None = None) -> dict:
+    if arch == "ann":
+        return run_ann_cell(shape_name, multi_pod)
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = shapes_for(cfg)[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_chips": n_chips, "kind": shape.kind, "ok": False}
+    t0 = time.time()
+    try:
+        step_fn, args, donate = build_cell(cfg, shape, mesh,
+                                           microbatches=microbatches)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(step_fn, donate_argnums=donate).lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = collective_report(hlo)
+        cell = flops_mod.cell_cost(cfg, shape)
+
+        flops_dev = cell.flops / n_chips
+        hbm_dev = cell.hbm_bytes / n_chips
+        coll_dev = coll["total"]  # HLO module is per-device already
+        compute_t = flops_dev / PEAK_FLOPS_BF16
+        memory_t = hbm_dev / HBM_BW
+        coll_t = coll_dev / ICI_BW
+        terms = {"compute_s": compute_t, "memory_s": memory_t,
+                 "collective_s": coll_t}
+        dominant = max(terms, key=terms.get)
+        per_dev_bytes = (mem.argument_size_in_bytes
+                         + mem.temp_size_in_bytes
+                         + mem.output_size_in_bytes
+                         - mem.alias_size_in_bytes)
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower - t0, 2),
+            compile_s=round(t_compile - t_lower, 2),
+            memory=dict(
+                argument_bytes=mem.argument_size_in_bytes,
+                temp_bytes=mem.temp_size_in_bytes,
+                output_bytes=mem.output_size_in_bytes,
+                alias_bytes=mem.alias_size_in_bytes,
+                per_device_bytes=per_dev_bytes,
+                fits_hbm=bool(per_dev_bytes <= HBM_BYTES),
+                hbm_frac=round(per_dev_bytes / HBM_BYTES, 3)),
+            hlo_cost=dict(
+                flops_per_dev=cost.get("flops", 0.0),
+                bytes_per_dev=cost.get("bytes accessed", 0.0)),
+            collectives={k: round(v, 1) if isinstance(v, float) else v
+                         for k, v in coll.items()},
+            analytic=dict(flops_total=cell.flops,
+                          model_flops_total=cell.model_flops,
+                          hbm_bytes_total=cell.hbm_bytes,
+                          param_bytes=cell.param_bytes,
+                          cache_bytes=cell.cache_bytes),
+            roofline=dict(**{k: round(v * 1e3, 4) for k, v in
+                             (("compute_ms", compute_t),
+                              ("memory_ms", memory_t),
+                              ("collective_ms", coll_t))},
+                          dominant=dominant.replace("_s", ""),
+                          useful_ratio=round(
+                              cell.model_flops / max(cell.flops, 1), 4)),
+        )
+        if keep_hlo:
+            os.makedirs(RESULTS_DIR, exist_ok=True)
+            with open(os.path.join(
+                    RESULTS_DIR,
+                    f"{arch}_{shape_name}_{rec['mesh']}.hlo"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shape_names = (list(shapes_for(cfg)) if args.shape == "all"
+                       else [args.shape])
+        for shape_name in shape_names:
+            if shape_name not in shapes_for(cfg):
+                print(f"SKIP {arch} x {shape_name} (long-context needs "
+                      f"sub-quadratic mixing; see DESIGN.md)")
+                continue
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, mp,
+                               keep_hlo=args.keep_hlo)
+                results.append(rec)
+                status = "OK " if rec["ok"] else "FAIL"
+                extra = ""
+                if rec["ok"]:
+                    r = rec["roofline"]
+                    extra = (f"dom={r['dominant']} "
+                             f"c={r['compute_ms']:.2f}ms "
+                             f"m={r['memory_ms']:.2f}ms "
+                             f"x={r['collective_ms']:.2f}ms "
+                             f"hbm={rec['memory']['hbm_frac']:.2f}")
+                else:
+                    extra = rec["error"][:120]
+                print(f"[{status}] {arch:18s} {shape_name:12s} "
+                      f"{rec['mesh']:8s} {rec['total_s']:7.1f}s  {extra}",
+                      flush=True)
+                out = args.out or os.path.join(RESULTS_DIR, "dryrun.json")
+                with open(out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh definitions (TPU v5e pods).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.  Hardware constants for the roofline live here.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi-pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever this host offers (tests/examples): (n, 1) data x model."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# ---- TPU v5e roofline constants (per chip) --------------------------------
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (aggregate modeled/chip)
+HBM_BYTES = 16e9                # 16 GB per v5e chip

@@ -1,0 +1,72 @@
+"""Generate the EXPERIMENTS.md roofline tables from results/dryrun/dryrun.json.
+
+    PYTHONPATH=src python -m repro.launch.roofline [results/dryrun/dryrun.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def step_estimate(r) -> float:
+    ro = r["roofline"]
+    return max(ro["compute_ms"], ro["memory_ms"], ro["collective_ms"])
+
+
+def roofline_fraction(r) -> float:
+    """useful-compute / modeled-step-time: the score the perf loop drives."""
+    ro = r["roofline"]
+    useful_ms = ro["compute_ms"] * ro.get("useful_ratio", 1.0)
+    return useful_ms / max(step_estimate(r), 1e-12)
+
+
+def table(results, mesh="16x16") -> str:
+    rows = [r for r in results if r["ok"] and r["mesh"] == mesh]
+    out = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant "
+        "| HBM frac | useful ratio | roofline frac |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for r in rows:
+        ro = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_ms']:.2f} | "
+            f"{ro['memory_ms']:.2f} | {ro['collective_ms']:.2f} | "
+            f"{ro['dominant']} | {r['memory']['hbm_frac']:.2f} | "
+            f"{ro.get('useful_ratio', 1.0):.2f} | "
+            f"{roofline_fraction(r):.3f} |")
+    return "\n".join(out)
+
+
+def summary(results) -> str:
+    ok = [r for r in results if r["ok"]]
+    fail = [r for r in results if not r["ok"]]
+    lines = [f"{len(ok)}/{len(results)} cells compiled "
+             f"({len([r for r in ok if r['mesh'] == '2x16x16'])} multi-pod)."]
+    if fail:
+        lines += [f"FAILED: {r['arch']} x {r['shape']} x {r['mesh']}: "
+                  f"{r['error'][:100]}" for r in fail]
+    worst = sorted(ok, key=roofline_fraction)[:3]
+    lines.append("Lowest roofline fractions: " + ", ".join(
+        f"{r['arch']}/{r['shape']}/{r['mesh']}={roofline_fraction(r):.3f}"
+        for r in worst))
+    collb = sorted(ok, key=lambda r: -r["roofline"]["collective_ms"])[:3]
+    lines.append("Most collective-bound: " + ", ".join(
+        f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        f"={r['roofline']['collective_ms']:.0f}ms" for r in collb))
+    return "\n".join(lines)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun/dryrun.json"
+    results = json.load(open(path))
+    print("## Single-pod (16x16)\n")
+    print(table(results, "16x16"))
+    print("\n## Multi-pod (2x16x16)\n")
+    print(table(results, "2x16x16"))
+    print("\n## Summary\n")
+    print(summary(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .registry import ModelAPI, abstract_params, get_model

@@ -1,0 +1,146 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+The conv/mel frontend is a STUB per the assignment: `input_specs()` feeds
+precomputed frame embeddings (B, S_enc, d_model).  Encoder: bidirectional
+self-attention + GELU MLP (pre-LN).  Decoder: causal self-attention +
+cross-attention over encoder output.  Sinusoidal positions (parameter-free;
+whisper uses sinusoidal encoder / learned decoder positions — noted in
+DESIGN.md).  Decoder embeddings are tied with the LM head as in Whisper.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from . import vocab_parallel as vp
+
+Params = dict
+
+
+def _sinusoid(t: int, d: int, offset=0):
+    pos = jnp.arange(t, dtype=jnp.float32) + offset
+    inv = jnp.exp(-math.log(10_000.0) * jnp.arange(0, d, 2, jnp.float32) / d)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[None]
+
+
+def init_enc_layer(cfg, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"ln1": L.init_norm(cfg, k1), "attn": L.init_attention(cfg, k2),
+            "ln2": L.init_norm(cfg, k3), "mlp": L.init_mlp(cfg, k4)}
+
+
+def init_dec_layer(cfg, key):
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {"ln1": L.init_norm(cfg, k1), "self_attn": L.init_attention(cfg, k2),
+            "ln_x": L.init_norm(cfg, k3), "cross_attn": L.init_attention(cfg, k4),
+            "ln2": L.init_norm(cfg, k5), "mlp": L.init_mlp(cfg, k6)}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, k1, k2, kf1, kf2 = jax.random.split(key, 5)
+    enc_keys = jax.random.split(k1, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_dec_layers)
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) * 0.02,
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(cfg, k))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(cfg, k))(dec_keys),
+        "enc_final": L.init_norm(cfg, kf1),
+        "dec_final": L.init_norm(cfg, kf2),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames (B, S_enc, D) stub embeddings -> encoder output."""
+    x = L.shard_batch_activation(frames.astype(cfg.compute_dtype))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def body(x, p):
+        h = L.apply_norm(cfg, p["ln1"], x)
+        x = x + L.attention(cfg, p["attn"], h, causal=False)
+        h = L.apply_norm(cfg, p["ln2"], x)
+        return x + L.apply_mlp(cfg, p["mlp"], h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.shard_batch_activation(
+        L.apply_norm(cfg, params["enc_final"], x))
+
+
+def decode_train(cfg: ModelConfig, params, enc_out, tokens):
+    x = L.shard_batch_activation(
+        vp.embed_lookup(params["embed"], tokens, cfg.compute_dtype))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)
+
+    def body(x, p):
+        h = L.apply_norm(cfg, p["ln1"], x)
+        x = x + L.attention(cfg, p["self_attn"], h, causal=True)
+        h = L.apply_norm(cfg, p["ln_x"], x)
+        ek, ev = L.project_cross_kv(cfg, p["cross_attn"], enc_out)
+        x = x + L.cross_attention(cfg, p["cross_attn"], h, ek, ev)
+        h = L.apply_norm(cfg, p["ln2"], x)
+        return x + L.apply_mlp(cfg, p["mlp"], h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return L.apply_norm(cfg, params["dec_final"], x)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """batch: {frames (B,S_enc,D), tokens (B,S_dec), labels (B,S_dec)}."""
+    enc_out = encode(cfg, params, batch["frames"])
+    hidden = decode_train(cfg, params, enc_out, batch["tokens"])
+    loss = vp.cross_entropy(params["embed"], hidden, batch["labels"],
+                            chunk=cfg.loss_chunk, transpose_w=True)
+    return loss, {"loss": loss}
+
+
+# -------------------------------------------------------------- decode -----
+def init_cache(cfg: ModelConfig, batch: int, seq: int, *, enc_len: int = 0,
+               dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    ld = cfg.n_dec_layers
+    enc_len = enc_len or min(seq, 4096)
+    return {
+        "k": jnp.zeros((ld, batch, seq, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((ld, batch, seq, cfg.n_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((ld, batch, enc_len, cfg.n_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((ld, batch, enc_len, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def build_cross_cache(cfg: ModelConfig, params, enc_out):
+    def per_layer(p):
+        return L.project_cross_kv(cfg, p["cross_attn"], enc_out)
+    ks, vs = jax.vmap(per_layer)(params["dec_layers"])
+    return ks, vs
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    pos = cache["pos"]
+    x = vp.embed_lookup(params["embed"], tokens, cfg.compute_dtype)
+    x = x + _sinusoid(1, cfg.d_model, offset=pos).astype(x.dtype)
+
+    def body(x, xs):
+        p, ck, cv, xk, xv = xs
+        h = L.apply_norm(cfg, p["ln1"], x)
+        a, ck, cv = L.attention_decode(cfg, p["self_attn"], h, ck, cv, pos)
+        x = x + a
+        h = L.apply_norm(cfg, p["ln_x"], x)
+        x = x + L.cross_attention(cfg, p["cross_attn"], h, xk, xv)
+        h = L.apply_norm(cfg, p["ln2"], x)
+        return x + L.apply_mlp(cfg, p["mlp"], h), (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = L.apply_norm(cfg, params["dec_final"], x)
+    logits = (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    return logits, {**cache, "k": ks, "v": vs, "pos": pos + 1}

@@ -1,0 +1,166 @@
+"""Jamba-style hybrid stack: Mamba + attention 1:7 interleave, MoE every
+second layer [arXiv:2403.19887].
+
+72 layers = 9 identical *groups* of 8 sub-layers; within a group, position
+j is an attention mixer iff j == attn_offset (4), and its FFN is MoE iff j
+is odd.  Groups share structure, so group params stack and the model scans
+over groups (HLO depth O(group), not O(72)); the 8 sub-layers unroll inside
+the scan body.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from . import ssm
+from . import vocab_parallel as vp
+
+GROUP = 8
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % GROUP == 0
+    return cfg.n_layers // GROUP
+
+
+def _is_attn(cfg, j) -> bool:
+    return j % cfg.attn_every == cfg.attn_offset
+
+
+def _is_moe(cfg, j) -> bool:
+    return cfg.n_experts > 0 and j % cfg.moe_every == cfg.moe_offset
+
+
+def init_group(cfg: ModelConfig, key):
+    p = {}
+    keys = jax.random.split(key, GROUP)
+    for j in range(GROUP):
+        k1, k2, k3, k4 = jax.random.split(keys[j], 4)
+        lay = {"ln1": L.init_norm(cfg, k1), "ln2": L.init_norm(cfg, k3)}
+        if _is_attn(cfg, j):
+            lay["attn"] = L.init_attention(cfg, k2)
+        else:
+            lay["mamba"] = ssm.init_mamba(cfg, k2)
+        if _is_moe(cfg, j):
+            lay["moe"] = L.init_moe(cfg, k4)
+        else:
+            lay["mlp"] = L.init_mlp(cfg, k4)
+        p[f"l{j}"] = lay
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kl, kh = jax.random.split(key, 3)
+    gkeys = jax.random.split(kl, n_groups(cfg))
+    stacked = jax.vmap(lambda k: init_group(cfg, k))(gkeys)
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) * 0.02,
+        "groups": stacked,
+        "final_norm": L.init_norm(cfg, kh),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab_size),
+    }
+
+
+def _group_forward(cfg: ModelConfig, gp, x):
+    aux = jnp.float32(0.0)
+    for j in range(GROUP):
+        p = gp[f"l{j}"]
+        if j:
+            # stop the latency-hiding scheduler from prefetching every
+            # sublayer's FSDP weight gather at once: gating the *params*
+            # through a barrier keyed on x makes each sublayer's gathers
+            # depend on the previous sublayer's output (without this all 8
+            # sublayers' gathered experts are live together, ~70 GB/device
+            # on jamba train — EXPERIMENTS.md §Perf)
+            x, p = jax.lax.optimization_barrier((x, p))
+        h = L.apply_norm(cfg, p["ln1"], x)
+        if "attn" in p:
+            x = x + L.attention(cfg, p["attn"], h, causal=True)
+        else:
+            x = x + ssm.mamba_forward(cfg, p["mamba"], h)
+        h = L.apply_norm(cfg, p["ln2"], x)
+        if "moe" in p:
+            y, a = L.apply_moe(cfg, p["moe"], h)
+            x, aux = x + y, aux + a
+        else:
+            x = x + L.apply_mlp(cfg, p["mlp"], h)
+    return x, aux
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens):
+    x = L.shard_batch_activation(
+        vp.embed_lookup(params["embed"], tokens, cfg.compute_dtype))
+
+    def body(carry, gp):
+        x, aux = carry
+        x, a = _group_forward(cfg, gp, x)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["groups"])
+    return L.apply_norm(cfg, params["final_norm"], x), aux / cfg.n_layers
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    hidden, aux = forward_hidden(cfg, params, batch["tokens"])
+    loss = vp.cross_entropy(params["lm_head"], hidden, batch["labels"],
+                            chunk=cfg.loss_chunk)
+    return loss + 0.01 * aux, {"loss": loss, "aux_loss": aux}
+
+
+# -------------------------------------------------------------- decode -----
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    g = n_groups(cfg)
+    hd = cfg.resolved_head_dim
+    n_mamba = GROUP - 1
+    return {
+        "k": jnp.zeros((g, batch, seq, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((g, batch, seq, cfg.n_kv_heads, hd), dtype),
+        "mamba_h": jnp.zeros((g, n_mamba, batch, ssm.d_inner(cfg),
+                              cfg.ssm_d_state), jnp.float32),
+        "mamba_conv": jnp.zeros((g, n_mamba, batch, cfg.ssm_conv - 1,
+                                 ssm.d_inner(cfg)), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    pos = cache["pos"]
+    x = L.shard_batch_activation(
+        vp.embed_lookup(params["embed"], tokens, cfg.compute_dtype))
+
+    def body(x, xs):
+        gp, ck, cv, mh, mconv = xs
+        m = 0
+        new_h, new_conv = [], []
+        for j in range(GROUP):
+            p = gp[f"l{j}"]
+            h = L.apply_norm(cfg, p["ln1"], x)
+            if "attn" in p:
+                a, ck, cv = L.attention_decode(cfg, p["attn"], h, ck, cv, pos)
+                x = x + a
+            else:
+                st = {"h": mh[m], "conv": mconv[m]}
+                y, st = ssm.mamba_step(cfg, p["mamba"], st, h)
+                new_h.append(st["h"])
+                new_conv.append(st["conv"])
+                x = x + y
+                m += 1
+            h = L.apply_norm(cfg, p["ln2"], x)
+            if "moe" in p:
+                y, _ = L.apply_moe(cfg, p["moe"], h)
+                x = x + y
+            else:
+                x = x + L.apply_mlp(cfg, p["mlp"], h)
+        return x, (ck, cv, jnp.stack(new_h), jnp.stack(new_conv))
+
+    x, (ks, vs, mhs, mconvs) = jax.lax.scan(
+        body, x, (params["groups"], cache["k"], cache["v"],
+                  cache["mamba_h"], cache["mamba_conv"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return logits, {"k": ks, "v": vs, "mamba_h": mhs, "mamba_conv": mconvs,
+                    "pos": pos + 1}

@@ -1,0 +1,685 @@
+"""Shared model layers: norms, RoPE, GQA attention (full / chunked / decode),
+gated MLPs, and capacity-based MoE with load-balancing loss.
+
+Everything is pure-functional (params as pytrees of jnp arrays) so the model
+stacks scan over layers, remat cleanly, and lower under pjit with GSPMD
+propagation.  Compute runs in cfg.compute_dtype (bf16 by default) with fp32
+softmax/norm accumulations.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = dict[str, Any]
+
+
+# ----------------------------------------------------------------- init ----
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), dtype) * scale)
+
+
+# ---------------------------------------------------------------- norms ----
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def init_norm(cfg: ModelConfig, key) -> Params:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,)),
+                "bias": jnp.zeros((cfg.d_model,))}
+    return {"scale": jnp.ones((cfg.d_model,))}
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x):
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"], cfg.rms_eps)
+    return rms_norm(x, p["scale"], cfg.rms_eps)
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions (...,) -> cos/sin (..., head_dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., T, H, hd); cos/sin (..., T, hd/2) broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+def init_attention(cfg: ModelConfig, key) -> Params:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,))
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,))
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,))
+        p["bo"] = jnp.zeros((cfg.d_model,))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,))
+        p["k_norm"] = jnp.ones((hd,))
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, x, positions, *, rope=True):
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ use_weight(cfg, p["wq"], 0).astype(x.dtype)
+    k = x @ use_weight(cfg, p["wk"], 0).astype(x.dtype)
+    v = x @ use_weight(cfg, p["wv"], 0).astype(x.dtype)
+    if cfg.use_bias:
+        q, k, v = q + p["bq"].astype(x.dtype), k + p["bk"].astype(x.dtype), \
+            v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, t, cfg.n_heads, hd)
+    k = k.reshape(b, t, cfg.n_kv_heads, hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    if rope and cfg.rope_theta > 0:
+        cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _expand_kv(k, g: int):
+    """(B,S,Hkv,hd) -> (B,S,H,hd).  GQA heads are expanded to the full head
+    count BEFORE the attention einsums: the combined H dim then shards over
+    `model` cleanly, whereas the split (Hkv, g) layout (8, 8) defeats GSPMD
+    head-sharding on a 16-way axis and replicates the (B,H,T,S) logits
+    (observed +17 GB/device on qwen3-32b train — EXPERIMENTS.md §Perf)."""
+    if g == 1:
+        return k
+    b, s, hkv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, g, hd)) \
+        .reshape(b, s, hkv * g, hd)
+
+
+def _sdpa_grouped(q, k, v, mask, scale):
+    """GQA attention WITHOUT expanding KV to full heads — used for decode,
+    where the cache is sequence-sharded over `model` and _expand_kv's
+    broadcast would make GSPMD all-gather the entire cache every layer
+    (56 GB/step observed on qwen3-1.7b decode — EXPERIMENTS.md §Perf).
+    The grouped einsum keeps the seq dim contracted in place; GSPMD emits
+    flash-decoding-style partial softmax + merge."""
+    b, t, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, t, hkv, g, hd)
+    logits = jnp.einsum("bthgd,bshd->bhgts", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None, :, :] if mask.shape[1] == hkv
+                           else mask[:, :1, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", w.astype(v.dtype), v)
+    return out.reshape(b, t, h, hd)
+
+
+def _sdpa(q, k, v, mask, scale, *, constrain_heads=True):
+    """q (B,T,H,hd), k/v (B,S,Hkv,hd) with GQA head grouping; mask
+    broadcastable to (B,1,T,S) (True = attend).
+
+    constrain_heads=False for decode: the KV cache is sequence-sharded over
+    `model` (memory), and forcing the head layout would reshard the whole
+    cache every layer — GSPMD instead emits flash-decoding-style partial
+    softmax with an LSE merge across the seq shards."""
+    b, t, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    k = _expand_kv(k, g)
+    v = _expand_kv(v, g)
+    if constrain_heads:
+        q = _maybe_shard(q, (("pod", "data"), None, "model", None))
+        k = _maybe_shard(k, (("pod", "data"), None, "model", None))
+    logits = jnp.einsum("bthd,bshd->bhts", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        if mask.ndim == 4 and mask.shape[1] not in (1, h):
+            mask = mask[:, :1]
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", w.astype(v.dtype), v)
+    return out
+
+
+def _sdpa_chunked(q, k, v, scale, *, chunk: int, causal: bool,
+                  prefix_len: int = 0):
+    """Online-softmax (flash-style) attention in jnp: scan over query chunks
+    outer, KV chunks inner; O(T*chunk) live memory instead of O(T^2)."""
+    b, t, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    k = _expand_kv(k, h // hkv)
+    v = _expand_kv(v, h // hkv)
+    q = _maybe_shard(q, (("pod", "data"), None, "model", None))
+    k = _maybe_shard(k, (("pod", "data"), None, "model", None))
+    v = _maybe_shard(v, (("pod", "data"), None, "model", None))
+    qc = min(chunk, t)
+    kc = min(chunk, s)
+    nq, nk = -(-t // qc), -(-s // kc)
+    # pad to chunk multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * qc - t), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kc - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kc - s), (0, 0), (0, 0)))
+    qp = qp.reshape(b, nq, qc, h, hd)
+    kp = kp.reshape(b, nk, kc, h, hd)
+    vp = vp.reshape(b, nk, kc, h, hd)
+    kv_valid = (jnp.arange(nk * kc) < s).reshape(nk, kc)
+
+    def q_step(_, qi):
+        qblk, qbase = qi                                  # (b,qc,h,hd), ()
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kbase, valid = ki
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk,
+                                preferred_element_type=jnp.float32) * scale
+            msk = valid[None, None, None, :]
+            if causal:
+                qpos = qbase + jnp.arange(qc)
+                kpos = kbase + jnp.arange(kc)
+                cm = qpos[:, None] >= kpos[None, :]
+                if prefix_len:   # prefix-LM: bidirectional over the prefix
+                    cm = cm | (kpos[None, :] < prefix_len)
+                msk = msk & cm[None, None, :, :]
+            logits = jnp.where(msk, logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, qc), jnp.float32)
+        a0 = jnp.zeros((b, h, qc, hd), jnp.float32)
+        kbases = jnp.arange(nk) * kc
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kp.transpose(1, 0, 2, 3, 4), vp.transpose(1, 0, 2, 3, 4),
+             kbases, kv_valid))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3)             # (b,qc,h,hd)
+
+    qbases = jnp.arange(nq) * qc
+    _, outs = jax.lax.scan(q_step, None,
+                           (qp.transpose(1, 0, 2, 3, 4), qbases))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * qc, h, hd)
+    return out[:, :t].astype(q.dtype)
+
+
+def attention(cfg: ModelConfig, p: Params, x, *, positions=None,
+              causal=True, prefix_len=0):
+    """Full-sequence attention (train / prefill). x (B,T,D) -> (B,T,D).
+
+    prefix_len > 0 gives a prefix-LM mask (bidirectional over the first
+    `prefix_len` positions — PaliGemma's vision prefix)."""
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    if t > cfg.attn_chunk_threshold:
+        out = _sdpa_chunked(q, k, v, scale, chunk=cfg.attn_chunk,
+                            causal=causal, prefix_len=prefix_len)
+    else:
+        mask = None
+        if causal:
+            i = jnp.arange(t)
+            mask = (i[:, None] >= i[None, :])
+            if prefix_len:
+                mask = mask | (i[None, :] < prefix_len)
+            mask = jnp.broadcast_to(mask[None, None, :, :], (b, 1, t, t))
+        out = _sdpa(q, k, v, mask, scale)
+    out = out.reshape(b, t, cfg.n_heads * cfg.resolved_head_dim)
+    y = out @ use_weight(cfg, p["wo"], 1).astype(x.dtype)
+    if cfg.use_bias:
+        y = y + p["bo"].astype(x.dtype)
+    return y
+
+
+def attention_decode(cfg: ModelConfig, p: Params, x, cache_k, cache_v, pos):
+    """One decode step. x (B,1,D); cache_k/v (B,S,Hkv,hd); pos () current
+    write index.  Returns (y, new_cache_k, new_cache_v)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    s = cache_k.shape[1]
+    mask = (jnp.arange(s)[None, :] <= pos)[:, None, None, :]
+    mask = jnp.broadcast_to(mask, (b, 1, 1, s))
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    out = _sdpa_grouped(q, cache_k.astype(x.dtype), cache_v.astype(x.dtype),
+                        mask, scale)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.resolved_head_dim)
+    y = out @ p["wo"].astype(x.dtype)
+    if cfg.use_bias:
+        y = y + p["bo"].astype(x.dtype)
+    return y, cache_k, cache_v
+
+
+def cross_attention(cfg: ModelConfig, p: Params, x, enc_k, enc_v):
+    """Decoder cross-attention over precomputed encoder K/V."""
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    if cfg.use_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(b, t, cfg.n_heads, hd)
+    out = _sdpa(q, enc_k.astype(x.dtype), enc_v.astype(x.dtype), None,
+                1.0 / math.sqrt(hd))
+    out = out.reshape(b, t, cfg.n_heads * hd)
+    y = out @ p["wo"].astype(x.dtype)
+    if cfg.use_bias:
+        y = y + p["bo"].astype(x.dtype)
+    return y
+
+
+def project_cross_kv(cfg: ModelConfig, p: Params, enc_out):
+    """Encoder output -> cross-attention K/V (computed once, cached)."""
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ p["wk"].astype(enc_out.dtype))
+    v = (enc_out @ p["wv"].astype(enc_out.dtype))
+    if cfg.use_bias:
+        k, v = k + p["bk"].astype(k.dtype), v + p["bv"].astype(v.dtype)
+    return (k.reshape(b, s, cfg.n_kv_heads, hd),
+            v.reshape(b, s, cfg.n_kv_heads, hd))
+
+
+# ------------------------------------------------------------------ MLP ----
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> Params:
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        p = {"w_gate": dense_init(ks[0], cfg.d_model, f),
+             "w_up": dense_init(ks[1], cfg.d_model, f),
+             "w_down": dense_init(ks[2], f, cfg.d_model)}
+    else:
+        p = {"w_up": dense_init(ks[1], cfg.d_model, f),
+             "w_down": dense_init(ks[2], f, cfg.d_model)}
+        if cfg.use_bias:
+            p["b_up"] = jnp.zeros((f,))
+            p["b_down"] = jnp.zeros((cfg.d_model,))
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ use_weight(cfg, p["w_gate"], 0).astype(x.dtype)) \
+            * (x @ use_weight(cfg, p["w_up"], 0).astype(x.dtype))
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ use_weight(cfg, p["w_gate"], 0).astype(x.dtype)) \
+            * (x @ use_weight(cfg, p["w_up"], 0).astype(x.dtype))
+    else:
+        h = x @ use_weight(cfg, p["w_up"], 0).astype(x.dtype)
+        if "b_up" in p:
+            h = h + p["b_up"].astype(x.dtype)
+        h = jnp.square(jax.nn.relu(h)) if cfg.act == "relu_sq" \
+            else jax.nn.gelu(h)
+    y = h @ use_weight(cfg, p["w_down"], 1).astype(x.dtype)
+    if "b_down" in p:
+        y = y + p["b_down"].astype(x.dtype)
+    return y
+
+
+# ------------------------------------------------------------------ MoE ----
+def init_moe(cfg: ModelConfig, key) -> Params:
+    e, f, d = cfg.n_experts, cfg.d_ff, cfg.d_model
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+    p = {"router": dense_init(ks[0], d, e),
+         "w_up": jax.random.normal(ks[2], (e, d, f)) * scale}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(ks[1], (e, d, f)) * scale
+    p["w_down"] = jax.random.normal(ks[3], (e, f, d)) * (1 / math.sqrt(f))
+    return p
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x):
+    """Capacity-based top-k MoE.  x (B,T,D) -> (y, aux_loss).
+
+    Two execution paths:
+      * **EP shard_map** (production): experts sharded over `model`, tokens
+        resharded (B over data, T over model) so each device routes its own
+        token slice; dispatch crosses the `model` axis with ONE tiled
+        all-to-all each way.  GSPMD's auto-partitioning of the scatter-based
+        dispatch replicates multi-GB buffers (verified: ~260s collective
+        term on qwen3-moe train before this path existed — EXPERIMENTS.md).
+      * **dense dispatch** (no mesh / tiny T): sort-based capacity dispatch
+        on one device.
+    """
+    mesh = _active_mesh()
+    if mesh is not None and "model" in mesh.axis_names:
+        n_model = mesh.shape["model"]
+        if (n_model > 1 and cfg.n_experts % n_model == 0
+                and x.shape[1] % n_model == 0):
+            return _apply_moe_ep(cfg, p, x, mesh)
+    return _moe_dense(cfg, p, x)
+
+
+def _moe_dense(cfg: ModelConfig, p: Params, x):
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    x2 = x.reshape(b * t, d)
+    n = b * t
+    gate, sel, me, ce = _route(cfg, p, x2)
+    aux = e * jnp.sum(me * ce)
+    cap = max(int(math.ceil(n * k / e * cfg.capacity_factor)), 4)
+    y2 = _dispatch_compute(cfg, p, x2, gate, sel, cap,
+                           lambda buf: _expert_mlp(cfg, p, buf, x2.dtype))
+    return y2.reshape(b, t, d), aux
+
+
+def _route(cfg, p, x2):
+    """Returns (gate, sel, me, ce): the load-balance statistics are kept
+    separate so the EP path can average them across shards BEFORE the
+    me*ce product (pmean of products != product of pmeans)."""
+    e, k, n = cfg.n_experts, cfg.top_k, x2.shape[0]
+    logits = (x2.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (N,E)
+    gate, sel = jax.lax.top_k(probs, k)                         # (N,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[sel.reshape(-1)].add(
+        jnp.ones((n * k,), jnp.float32)) / (n * k)
+    return gate, sel, me, ce
+
+
+def _expert_mlp(cfg, p, buf, dtype):
+    if "w_gate" in p:
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dtype))) \
+            * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dtype))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf,
+                                   p["w_up"].astype(dtype)))
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dtype))
+
+
+def _dispatch_compute(cfg, p, x2, gate, sel, cap, exchange):
+    """Sort-based capacity dispatch shared by both paths.  `exchange` takes
+    the (E, cap, D) send buffer through expert compute (locally for the
+    dense path; across the all-to-all for EP) and returns (E, cap, D)."""
+    n, d = x2.shape
+    e, k = cfg.n_experts, cfg.top_k
+    flat_e = sel.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = order // k
+    gate_sorted = gate.reshape(-1)[order]
+    counts = jnp.zeros((e,), jnp.int32).at[e_sorted].add(1)
+    start = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n * k) - start[e_sorted]
+    keep = rank < cap
+    dest = jnp.where(keep, e_sorted * cap + rank, e * cap)      # overflow row
+
+    buf = jnp.zeros((e * cap + 1, d), x2.dtype).at[dest].add(
+        jnp.where(keep[:, None], x2[tok_sorted], 0))
+    out = exchange(buf[:-1].reshape(e, cap, d))
+    out = out.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None],
+                         out[jnp.minimum(dest, e * cap - 1)], 0)
+    y2 = jnp.zeros((n, d), x2.dtype).at[tok_sorted].add(
+        gathered * gate_sorted[:, None].astype(x2.dtype))
+    return y2
+
+
+def fsdp_param_q8(w, axis_name: str, dim: int):
+    """ZeRO++-style quantized weight gather (qwZ): the FSDP all-gather moves
+    int8 blocks + per-slice scales instead of bf16/f32 — 2-4x less ICI
+    traffic on the dominant collective of the >=200B training cells.
+    Backward reduce-scatters the *unquantized* gradient (gradient fidelity
+    preserved; only the forward weight sees quantization).  Enabled by
+    ModelConfig.fsdp_gather_quant (hillclimb A, EXPERIMENTS.md §Perf)."""
+
+    @jax.custom_vjp
+    def f(w_):
+        loc = w_.shape[dim]
+        scale = jnp.max(jnp.abs(w_.astype(jnp.float32)),
+                        axis=dim, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(w_.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+        qg = jax.lax.all_gather(q, axis_name, axis=dim, tiled=True)
+        sg = jax.lax.all_gather(scale, axis_name, axis=dim, tiled=True)
+        n = qg.shape[dim] // loc
+        # per-shard scales: view the gathered dim as (n, loc) blocks
+        blk = qg.shape[:dim] + (n, loc) + qg.shape[dim + 1:]
+        sblk = sg.shape[:dim] + (n, 1) + sg.shape[dim + 1:]
+        out = (qg.reshape(blk).astype(jnp.float32)
+               * sg.reshape(sblk)).reshape(qg.shape)
+        return out.astype(w_.dtype)
+
+    def fwd(w_):
+        return f(w_), None
+
+    def bwd(_, g):
+        return (jax.lax.psum_scatter(g, axis_name, scatter_dimension=dim,
+                                     tiled=True),)
+
+    f.defvjp(fwd, bwd)
+    return f(w)
+
+
+def fsdp_param(w, axis_name: str, dim: int):
+    """Explicit ZeRO-3 parameter handling inside shard_map: all-gather the
+    FSDP-sharded dim for the forward, reduce-scatter the cotangent in the
+    backward.  Without this, shard_map's transpose psums the weight
+    cotangent (replicated over `data`) and the scanned-layer gradient
+    accumulator balloons 16x (85 GB/device observed on jamba train —
+    EXPERIMENTS.md §Perf)."""
+
+    @jax.custom_vjp
+    def f(w_):
+        return jax.lax.all_gather(w_, axis_name, axis=dim, tiled=True)
+
+    def fwd(w_):
+        return f(w_), None
+
+    def bwd(_, g):
+        return (jax.lax.psum_scatter(g, axis_name, scatter_dimension=dim,
+                                     tiled=True),)
+
+    f.defvjp(fwd, bwd)
+    return f(w)
+
+
+import contextlib as _ctx
+
+# Serving-mode toggle (trace-time): inference keeps weights resident
+# (TP-sharded, replicated over data) unless they simply cannot fit —
+# per-use ZeRO gathers are a training trade, not a serving one.
+_SERVING = [False]
+SERVE_FSDP_THRESHOLD = 100e9
+
+
+@_ctx.contextmanager
+def serving_mode():
+    _SERVING.append(True)
+    try:
+        yield
+    finally:
+        _SERVING.pop()
+
+
+def _fsdp_active(cfg: ModelConfig, mesh) -> bool:
+    from repro.configs.base import param_count
+    from repro.models.sharding import FSDP_THRESHOLD
+    total, _ = param_count(cfg)
+    thresh = SERVE_FSDP_THRESHOLD if _SERVING[-1] else FSDP_THRESHOLD
+    return total >= thresh and "data" in mesh.axis_names \
+        and mesh.shape["data"] > 1
+
+
+def use_weight(cfg: ModelConfig, w, data_dim: int):
+    """Use-site wrapper for a 2-D FSDP-sharded weight: explicit all-gather
+    forward / reduce-scatter backward over `data` (see fsdp_param).  Applied
+    by every dense projection so the scanned-layer gradient accumulators
+    keep the parameter layout instead of replicating over the FSDP axis.
+    No-op for non-FSDP configs, missing meshes, or non-divisible dims."""
+    mesh = _active_mesh()
+    if mesh is None or w.ndim != 2 or not _fsdp_active(cfg, mesh):
+        return w
+    nd = mesh.shape["data"]
+    if w.shape[data_dim] % nd != 0:
+        return w
+    other = 1 - data_dim
+    nm = mesh.shape.get("model", 1)
+    P = jax.sharding.PartitionSpec
+    in_spec = [None, None]
+    in_spec[data_dim] = "data"
+    if nm > 1 and w.shape[other] % nm == 0:
+        in_spec[other] = "model"
+    out_spec = list(in_spec)
+    out_spec[data_dim] = None
+    # check_vma off: all_gather output is value-replicated over `data` but
+    # the vma type system cannot infer that through the custom_vjp.
+    gather = fsdp_param_q8 if getattr(cfg, "fsdp_gather_quant", False) \
+        else fsdp_param
+    return jax.shard_map(
+        lambda wl: gather(wl, "data", data_dim), mesh=mesh,
+        in_specs=P(*in_spec), out_specs=P(*out_spec),
+        check_vma=False)(w)
+
+
+def _apply_moe_ep(cfg: ModelConfig, p: Params, x, mesh):
+    """Expert parallelism via shard_map: tokens (B over data-axes, T over
+    model), experts over model; one tiled all-to-all each way.  FSDP archs
+    keep expert weights data-sharded and gather/reduce-scatter explicitly
+    (fsdp_param)."""
+    e, k = cfg.n_experts, cfg.top_k
+    n_model = mesh.shape["model"]
+    e_loc = e // n_model
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    P = jax.sharding.PartitionSpec
+    x_spec = P(dp if dp else None, "model", None)
+    fsdp = _fsdp_active(cfg, mesh)
+    if fsdp:
+        # true parameter layout: (E over model, D-or-F over data)
+        w_specs = {"w_gate": P("model", "data", None),
+                   "w_up": P("model", "data", None),
+                   "w_down": P("model", None, "data")}
+        gather_dim = {"w_gate": 1, "w_up": 1, "w_down": 2}
+    else:
+        w_specs = {"w_gate": P("model", None, None),
+                   "w_up": P("model", None, None),
+                   "w_down": P("model", None, None)}
+        gather_dim = {}
+
+    has_gate = "w_gate" in p
+    w_names = (["w_gate"] if has_gate else []) + ["w_up", "w_down"]
+
+    gather = fsdp_param_q8 if getattr(cfg, "fsdp_gather_quant", False) \
+        else fsdp_param
+
+    def local_fn(xl, router, *ws):
+        lp = {"router": router}
+        for name, w in zip(w_names, ws):
+            if fsdp:
+                w = gather(w, "data", gather_dim[name])
+            lp[name] = w
+        b_loc, t_loc, d = xl.shape
+        x2 = xl.reshape(b_loc * t_loc, d)
+        n = x2.shape[0]
+        gate, sel, me, ce = _route(cfg, lp, x2)
+        cap = max(int(math.ceil(n * k / e * cfg.capacity_factor)), 4)
+
+        def exchange(send):                      # (E, cap, D) local layout
+            send = send.reshape(n_model, e_loc, cap, d)
+            recv = jax.lax.all_to_all(send, "model", 0, 0)
+            ebuf = recv.transpose(1, 0, 2, 3).reshape(e_loc, n_model * cap,
+                                                      d)
+            eout = _expert_mlp(cfg, lp, ebuf, x2.dtype)  # local expert shard
+            back = eout.reshape(e_loc, n_model, cap, d).transpose(1, 0, 2, 3)
+            ret = jax.lax.all_to_all(back, "model", 0, 0)
+            return ret.reshape(e, cap, d)
+
+        y2 = _dispatch_compute(cfg, lp, x2, gate, sel, cap, exchange)
+        axes = dp + ("model",) if dp else ("model",)
+        me_g = jax.lax.pmean(me, axes)
+        ce_g = jax.lax.pmean(ce, axes)
+        aux = e * jnp.sum(me_g * ce_g)
+        return y2.reshape(b_loc, t_loc, d), aux
+
+    ws = tuple(p[name] for name in w_names)
+    y, aux = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(x_spec, P(None, None))
+        + tuple(w_specs[name] for name in w_names),
+        out_specs=(x_spec, P()),
+    )(x, p["router"], *ws)
+    return y, aux
+
+
+def _active_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return None
+        return mesh
+    except Exception:
+        return None
+
+
+def _maybe_shard(x, spec):
+    """with_sharding_constraint if a mesh with the named axes is active.
+    Spec entries may be axis names, tuples of axis names, or None."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+
+    def clean(s):
+        if s is None:
+            return None
+        if isinstance(s, tuple):
+            kept = tuple(a for a in s if a in names)
+            return kept if kept else None
+        return s if s in names else None
+
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*(clean(s) for s in spec)))
+
+
+def shard_batch_activation(x):
+    """Constrain a (B, T, D) activation to batch-over-DP sharding."""
+    spec = (("pod", "data"),) + (None,) * (x.ndim - 1)
+    return _maybe_shard(x, spec)

@@ -1,0 +1,152 @@
+"""Uniform model API over all architecture families.
+
+Every family exposes:
+    init_params(key)                  -> params pytree
+    loss(params, batch)               -> (scalar, metrics)      [train shapes]
+    prefill_step(params, batch)       -> (logits, cache-ish)    [prefill shapes]
+    decode_step(params, cache, batch) -> (logits, cache)        [decode shapes]
+    init_cache(batch, seq)            -> cache pytree
+    train_batch_shapes(shape)         -> {name: (shape, dtype)}
+    decode_batch_shapes(shape)        -> ...
+
+The dry-run and trainer consume only this interface.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import encdec, hybrid, rwkv, transformer
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init_params: Callable
+    loss: Callable
+    decode_step: Callable
+    init_cache: Callable
+    prefill_step: Callable
+    batch_spec: Callable      # (ShapeConfig) -> dict[str, ShapeDtypeStruct]
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _lm_batch_spec(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": _spec((b, s), jnp.int32),
+               "labels": _spec((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            out["vision_embeds"] = _spec(
+                (b, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encdec:
+            out = {"frames": _spec((b, s, cfg.d_model), jnp.bfloat16),
+                   "tokens": _spec((b, s), jnp.int32),
+                   "labels": _spec((b, s), jnp.int32)}
+        return out
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            return {"frames": _spec((b, s, cfg.d_model), jnp.bfloat16),
+                    "tokens": _spec((b, 1), jnp.int32)}
+        out = {"tokens": _spec((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            out["vision_embeds"] = _spec(
+                (b, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": _spec((b, 1), jnp.int32)}
+
+
+def _cast_params(cfg: ModelConfig, params):
+    """Apply the config's parameter dtype policy (bf16 for the >=200B archs:
+    master-weight-free Adafactor training — DESIGN.md §8)."""
+    if cfg.param_dtype == "float32":
+        return params
+    dt = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(
+        lambda p: p.astype(dt) if p.dtype == jnp.float32 else p, params)
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+
+        def prefill_step(params, batch):
+            total = batch["tokens"].shape[1] + (
+                batch["vision_embeds"].shape[1]
+                if "vision_embeds" in batch else 0)
+            return transformer.prefill(
+                cfg, params, batch["tokens"], cache_len=total + 16,
+                vision_embeds=batch.get("vision_embeds"))
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: _cast_params(cfg, mod.init_params(cfg, key)),
+            loss=lambda p, b: mod.loss_fn(cfg, p, b),
+            decode_step=lambda p, c, b: mod.decode_step(cfg, p, c,
+                                                        b["tokens"]),
+            init_cache=lambda b, s: mod.init_cache(cfg, b, s),
+            prefill_step=prefill_step,
+            batch_spec=lambda sh: _lm_batch_spec(cfg, sh),
+        )
+    if fam == "hybrid":
+        def prefill_hybrid(params, batch):
+            # hybrid prefill = full forward producing hidden states; the
+            # recurrent caches fill sequentially in serving (32k prefill for
+            # jamba runs the train-style forward)
+            return hybrid.forward_hidden(cfg, params, batch["tokens"])
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: _cast_params(cfg, hybrid.init_params(cfg, key)),
+            loss=lambda p, b: hybrid.loss_fn(cfg, p, b),
+            decode_step=lambda p, c, b: hybrid.decode_step(cfg, p, c,
+                                                           b["tokens"]),
+            init_cache=lambda b, s: hybrid.init_cache(cfg, b, s),
+            prefill_step=prefill_hybrid,
+            batch_spec=lambda sh: _lm_batch_spec(cfg, sh),
+        )
+    if fam == "ssm":
+        def prefill_ssm(params, batch):
+            return rwkv.forward_hidden(cfg, params, batch["tokens"])
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: _cast_params(cfg, rwkv.init_params(cfg, key)),
+            loss=lambda p, b: rwkv.loss_fn(cfg, p, b),
+            decode_step=lambda p, c, b: rwkv.decode_step(cfg, p, c,
+                                                         b["tokens"]),
+            init_cache=lambda b, s: rwkv.init_cache(cfg, b, s),
+            prefill_step=prefill_ssm,
+            batch_spec=lambda sh: _lm_batch_spec(cfg, sh),
+        )
+    if fam == "encdec":
+        def prefill_encdec(params, batch):
+            enc_out = encdec.encode(cfg, params, batch["frames"])
+            ks, vs = encdec.build_cross_cache(cfg, params, enc_out)
+            return ks, vs
+
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda key: _cast_params(cfg, encdec.init_params(cfg, key)),
+            loss=lambda p, b: encdec.loss_fn(cfg, p, b),
+            decode_step=lambda p, c, b: encdec.decode_step(cfg, p, c,
+                                                           b["tokens"]),
+            init_cache=lambda b, s: encdec.init_cache(cfg, b, s),
+            prefill_step=prefill_encdec,
+            batch_spec=lambda sh: _lm_batch_spec(cfg, sh),
+        )
+    raise ValueError(fam)
+
+
+def abstract_params(api: ModelAPI, seed: int = 0):
+    """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+    return jax.eval_shape(api.init_params, jax.random.PRNGKey(seed))

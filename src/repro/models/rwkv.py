@@ -1,0 +1,229 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay
+[arXiv:2404.05892].
+
+Time-mix: token-shift lerps feed r/k/v/g projections; the per-channel decay
+w_t is data-dependent through a small LoRA (w = exp(-exp(w0 + tanh(x A) B)))
+— the defining Finch feature.  The WKV recurrence per head with state
+S in R^{hd x hd}:
+
+    y_t = r_t · (S_t + (u ⊙ k_t) v_tᵀ)
+    S_{t+1} = diag(w_t) S_t + k_t v_tᵀ
+
+Channel-mix: token-shift + squared-ReLU MLP.  Train path scans over time
+(chunked parallel WKV is a §Perf hillclimb candidate); decode carries
+(S, last-token shifts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, layer_norm
+
+W_LORA = 64
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_size
+
+
+def init_rwkv_layer(cfg: ModelConfig, key):
+    d, hd = cfg.d_model, cfg.rwkv_head_size
+    h = n_heads(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        "ln1_s": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "ln2_s": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+        # time-mix
+        "mu_r": jnp.full((d,), 0.5), "mu_k": jnp.full((d,), 0.5),
+        "mu_v": jnp.full((d,), 0.5), "mu_g": jnp.full((d,), 0.5),
+        "mu_w": jnp.full((d,), 0.5),
+        "w_r": dense_init(ks[0], d, d), "w_k": dense_init(ks[1], d, d),
+        "w_v": dense_init(ks[2], d, d), "w_g": dense_init(ks[3], d, d),
+        "w_o": dense_init(ks[4], d, d),
+        "w0": jnp.full((d,), -4.0),
+        "w_lora_a": jax.random.normal(ks[5], (d, W_LORA)) * 0.01,
+        "w_lora_b": jax.random.normal(ks[6], (W_LORA, d)) * 0.01,
+        "u": jax.random.normal(ks[7], (h, hd)) * 0.1,   # bonus
+        "lnx_s": jnp.ones((d,)), "lnx_b": jnp.zeros((d,)),
+        # channel-mix
+        "mu_ck": jnp.full((d,), 0.5), "mu_cr": jnp.full((d,), 0.5),
+        "w_ck": dense_init(ks[8], d, cfg.d_ff),
+        "w_cv": dense_init(ks[9], cfg.d_ff, d),
+        "w_cr": dense_init(ks[0], d, d),
+    }
+
+
+def _lerp(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay in (0,1)."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.exp(-jnp.exp(p["w0"] + lora))
+
+
+def _heads(x, h, hd):
+    return x.reshape(x.shape[:-1] + (h, hd))
+
+
+def time_mix_forward(cfg: ModelConfig, p, x):
+    """x (B,T,D) -> (B,T,D) via the WKV6 recurrence (scan over T)."""
+    b, t, d = x.shape
+    h, hd = n_heads(cfg), cfg.rwkv_head_size
+    xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :t]       # token shift
+    r = _heads(_lerp(x, xx, p["mu_r"]) @ p["w_r"].astype(x.dtype), h, hd)
+    k = _heads(_lerp(x, xx, p["mu_k"]) @ p["w_k"].astype(x.dtype), h, hd)
+    v = _heads(_lerp(x, xx, p["mu_v"]) @ p["w_v"].astype(x.dtype), h, hd)
+    g = jax.nn.silu(_lerp(x, xx, p["mu_g"]) @ p["w_g"].astype(x.dtype))
+    w = _heads(_decay(p, _lerp(x, xx, p["mu_w"])), h, hd)   # (B,T,H,hd) fp32
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs                            # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]         # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       S + p["u"][None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, S0,
+        (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+         k.transpose(1, 0, 2, 3).astype(jnp.float32),
+         v.transpose(1, 0, 2, 3).astype(jnp.float32),
+         w.transpose(1, 0, 2, 3)))
+    # cast the recurrence output to compute dtype BEFORE the norm: keeps
+    # the (B,T,D) tensor crossing the TP boundary in bf16, not f32
+    y = ys.transpose(1, 0, 2, 3).reshape(b, t, d).astype(x.dtype)
+    y = layer_norm(y, p["lnx_s"], p["lnx_b"])              # group-norm analog
+    return (y.astype(x.dtype) * g) @ p["w_o"].astype(x.dtype)
+
+
+def channel_mix_forward(cfg: ModelConfig, p, x):
+    b, t, d = x.shape
+    xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :t]
+    kx = _lerp(x, xx, p["mu_ck"]) @ p["w_ck"].astype(x.dtype)
+    kx = jnp.square(jax.nn.relu(kx))
+    rx = jax.nn.sigmoid(_lerp(x, xx, p["mu_cr"]) @ p["w_cr"].astype(x.dtype))
+    return rx * (kx @ p["w_cv"].astype(x.dtype))
+
+
+def rwkv_block_forward(cfg: ModelConfig, p, x):
+    x = x + time_mix_forward(cfg, p, layer_norm(x, p["ln1_s"], p["ln1_b"]))
+    x = x + channel_mix_forward(cfg, p, layer_norm(x, p["ln2_s"], p["ln2_b"]))
+    return x
+
+
+# ------------------------------------------------------------- decode ------
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    h, hd, d = n_heads(cfg), cfg.rwkv_head_size, cfg.d_model
+    return {
+        "S": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((batch, d), dtype),    # time-mix last token
+        "shift_c": jnp.zeros((batch, d), dtype),    # channel-mix last token
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kl, kh = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) * 0.02,
+        "ln_in_s": jnp.ones((cfg.d_model,)),
+        "ln_in_b": jnp.zeros((cfg.d_model,)),
+        "layers": jax.vmap(lambda k: init_rwkv_layer(cfg, k))(lkeys),
+        "ln_out_s": jnp.ones((cfg.d_model,)),
+        "ln_out_b": jnp.zeros((cfg.d_model,)),
+        "lm_head": dense_init(kh, cfg.d_model, cfg.vocab_size),
+    }
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens):
+    from .layers import shard_batch_activation as _sba
+    from . import vocab_parallel as vp
+    x = _sba(vp.embed_lookup(params["embed"], tokens, cfg.compute_dtype))
+    x = layer_norm(x, params["ln_in_s"], params["ln_in_b"])
+
+    def body(x, p):
+        return rwkv_block_forward(cfg, p, x), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return layer_norm(x, params["ln_out_s"], params["ln_out_b"])
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    from . import vocab_parallel as vp
+    hidden = forward_hidden(cfg, params, batch["tokens"])
+    loss = vp.cross_entropy(params["lm_head"], hidden, batch["labels"],
+                            chunk=cfg.loss_chunk)
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    """seq is irrelevant for an attention-free model — state is O(1)."""
+    h, hd, d = n_heads(cfg), cfg.rwkv_head_size, cfg.d_model
+    ll = cfg.n_layers
+    return {
+        "S": jnp.zeros((ll, batch, h, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((ll, batch, d), dtype),
+        "shift_c": jnp.zeros((ll, batch, d), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    from .layers import shard_batch_activation as _sba
+    from . import vocab_parallel as vp
+    x = _sba(vp.embed_lookup(params["embed"], tokens, cfg.compute_dtype))
+    x = layer_norm(x, params["ln_in_s"], params["ln_in_b"])
+
+    def body(x, xs):
+        p, S, st, sc = xs
+        y, ns = rwkv_block_step(cfg, p, {"S": S, "shift_t": st,
+                                         "shift_c": sc}, x)
+        return y, (ns["S"], ns["shift_t"], ns["shift_c"])
+
+    x, (Ss, sts, scs) = jax.lax.scan(
+        body, x, (params["layers"], cache["S"], cache["shift_t"],
+                  cache["shift_c"]))
+    x = layer_norm(x, params["ln_out_s"], params["ln_out_b"])
+    logits = (x @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return logits, {"S": Ss, "shift_t": sts, "shift_c": scs,
+                    "pos": cache["pos"] + 1}
+
+
+def rwkv_block_step(cfg: ModelConfig, p, state, x):
+    """x (B,1,D) -> (y, new state)."""
+    b, _, d = x.shape
+    h, hd = n_heads(cfg), cfg.rwkv_head_size
+    xt = layer_norm(x[:, 0], p["ln1_s"], p["ln1_b"])
+    xx = state["shift_t"].astype(xt.dtype)
+    r = _heads(_lerp(xt, xx, p["mu_r"]) @ p["w_r"].astype(xt.dtype), h, hd)
+    k = _heads(_lerp(xt, xx, p["mu_k"]) @ p["w_k"].astype(xt.dtype), h, hd)
+    v = _heads(_lerp(xt, xx, p["mu_v"]) @ p["w_v"].astype(xt.dtype), h, hd)
+    g = jax.nn.silu(_lerp(xt, xx, p["mu_g"]) @ p["w_g"].astype(xt.dtype))
+    w = _heads(_decay(p, _lerp(xt, xx, p["mu_w"])), h, hd)
+    kv = (k.astype(jnp.float32)[..., :, None]
+          * v.astype(jnp.float32)[..., None, :])
+    y = jnp.einsum("bhi,bhij->bhj", r.astype(jnp.float32),
+                   state["S"] + p["u"][None, :, :, None] * kv)
+    S = w[..., :, None] * state["S"] + kv
+    y = layer_norm(y.reshape(b, d), p["lnx_s"], p["lnx_b"])
+    y = (y.astype(x.dtype) * g) @ p["w_o"].astype(x.dtype)
+    x1 = x[:, 0] + y
+
+    xc = layer_norm(x1, p["ln2_s"], p["ln2_b"])
+    xxc = state["shift_c"].astype(xc.dtype)
+    kx = jnp.square(jax.nn.relu(
+        _lerp(xc, xxc, p["mu_ck"]) @ p["w_ck"].astype(xc.dtype)))
+    rx = jax.nn.sigmoid(_lerp(xc, xxc, p["mu_cr"])
+                        @ p["w_cr"].astype(xc.dtype))
+    x2 = x1 + rx * (kx @ p["w_cv"].astype(xc.dtype))
+    new_state = {"S": S, "shift_t": xt.astype(state["shift_t"].dtype),
+                 "shift_c": xc.astype(state["shift_c"].dtype)}
+    return x2[:, None, :], new_state

@@ -1,0 +1,189 @@
+"""Parameter/batch/cache sharding rules for the production meshes.
+
+Strategy (DESIGN.md §5):
+  * TP over `model`: attention projections on the fused head dim, MLP on the
+    ffn dim, MoE on the expert dim, vocab on the embedding/head;
+  * DP over (`pod`,`data`): the batch dim of every input;
+  * FSDP (ZeRO-3-style) over `data` for the non-TP axis of big-arch weight
+    matrices (>= FSDP_THRESHOLD total params) — optimizer state inherits;
+  * SP for long-context decode: KV cache sharded along sequence over `data`.
+
+Rules are path-regex based over the pytree; anything unmatched stays
+replicated and GSPMD propagates the rest.  Shardings are attached directly
+to ShapeDtypeStructs so abstract dry-run lowering needs no in_shardings.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, param_count
+
+FSDP_THRESHOLD = 8e9
+
+# (path regex, (spec for last dims, rightmost-aligned))
+# Specs are given for the *parameter's own* dims, right-aligned, so stacked
+# layer/group leading dims fall through to None.
+_MATRIX_RULES: list[tuple[str, tuple]] = [
+    # embedding table: vocab over `model`, consumed ONLY through the
+    # vocab-parallel shard_map kernels (models/vocab_parallel.py) — GSPMD's
+    # auto-partitioned token gather replicates multi-GB buffers otherwise.
+    (r"embed$",                 ("model", None)),
+    (r"lm_head$",               (None, "model")),
+    (r"(wq|wk|wv)$",            ("fsdp", "model")),
+    (r"wo$",                    ("model", "fsdp")),
+    (r"(w_gate|w_up)$",         ("fsdp", "model")),
+    (r"w_down$",                ("model", "fsdp")),
+    (r"(w_r|w_k|w_v|w_g|w_ck|w_cr)$", ("fsdp", "model")),
+    (r"(w_o|w_cv)$",            ("model", "fsdp")),
+    (r"moe/router$",            (None, None)),
+    (r"in_proj$",               ("fsdp", "model")),
+    (r"out_proj$",              ("model", "fsdp")),
+    (r"x_proj$",                ("model", None)),
+    (r"dt_proj$",               (None, "model")),
+    (r"A_log$",                 ("model", None)),
+    (r"conv_w$",                (None, "model")),
+]
+# MoE expert tensors: expert dim -> model (EP); inner dims fsdp/None.
+_MOE_RULES: list[tuple[str, tuple]] = [
+    (r"moe/(w_gate|w_up)$",     ("model", "fsdp", None)),
+    (r"moe/w_down$",            ("model", None, "fsdp")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def spec_for_param(path: str, ndim: int, *, fsdp: bool,
+                   moe: bool) -> P:
+    # optimizer-state leaves inherit the parameter's rule; adafactor's
+    # factored leaves drop the corresponding axis of the spec.
+    factored = None
+    m = re.search(r"/(vr|vc|v|m)$", path)
+    if m and m.group(1) in ("vr", "vc"):
+        factored = m.group(1)
+    path = re.sub(r"/(vr|vc|v|m)$", "", path)
+
+    sub = None
+    for pat, spec in _MOE_RULES:
+        if re.search(pat, path):
+            sub = spec
+            break
+    if sub is None:
+        for pat, spec in _MATRIX_RULES:
+            if re.search(pat, path):
+                sub = spec
+                break
+    if sub is None:
+        return P()
+    sub = tuple(("data" if fsdp else None) if s == "fsdp" else s
+                for s in sub)
+    if factored == "vr":          # param.shape[:-1]
+        sub = sub[:-1]
+    elif factored == "vc":        # param.shape[:-2] + param.shape[-1:]
+        sub = sub[:-2] + sub[-1:]
+    if ndim < len(sub):
+        sub = sub[-ndim:] if ndim > 0 else ()
+    pad = (None,) * (ndim - len(sub))
+    return P(*(pad + tuple(sub)))
+
+
+def _adjust_for_divisibility(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim (GSPMD would
+    otherwise pad; dropping keeps memory estimates exact)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, s in zip(shape, spec):
+        if s is None:
+            out.append(None)
+        else:
+            axes = s if isinstance(s, tuple) else (s,)
+            n = int(np.prod([sizes[a] for a in axes]))
+            out.append(s if dim % n == 0 else None)
+    return P(*out)
+
+
+def params_shardings(cfg: ModelConfig, mesh: Mesh, abstract_params,
+                     *, serving: bool = False):
+    """Pytree of NamedSharding matching abstract params (or opt state —
+    adafactor's factored leaves get right-aligned truncated specs).
+    Serving keeps weights TP-resident unless >=100B (layers.serving_mode)."""
+    total, _ = param_count(cfg)
+    threshold = 100e9 if serving else FSDP_THRESHOLD
+    fsdp = total >= threshold and "data" in mesh.axis_names
+
+    def assign(path, leaf):
+        p = _path_str(path)
+        spec = spec_for_param(p, leaf.ndim, fsdp=fsdp,
+                              moe=cfg.n_experts > 0)
+        spec = _adjust_for_divisibility(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_spec: dict):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    out = {}
+    for name, sds in batch_spec.items():
+        spec = [dp] + [None] * (sds.ndim - 1)
+        spec = _adjust_for_divisibility(P(*spec), sds.shape, mesh)
+        out[name] = NamedSharding(mesh, spec)
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, abstract_cache,
+                    shape: ShapeConfig):
+    """Decode caches: batch over (pod,data) when divisible; else — the
+    long-context single-sequence case — shard the KV sequence dim over
+    `data` (sequence parallelism)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = int(np.prod([dict(zip(mesh.axis_names,
+                                 mesh.devices.shape))[a] for a in dp]))
+    batch_shardable = shape.global_batch % n_dp == 0
+
+    all_axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+
+    def assign(path, leaf):
+        p = _path_str(path)
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if re.search(r"(^|/)(k|v|cross_k|cross_v)$", p) and leaf.ndim == 5:
+            # (L, B, S, H, hd): batch over DP + sequence over model; the
+            # single-sequence long-context case shards seq over everything
+            if batch_shardable:
+                spec = P(None, dp, "model", None, None)
+            else:
+                spec = P(None, None, all_axes, None, None)  # SP over seq
+        elif re.search(r"mamba_h$", p):
+            spec = P(*( (None,) * (leaf.ndim - 2) + ("model", None)))
+        elif re.search(r"mamba_conv$", p):
+            spec = P(*((None,) * (leaf.ndim - 1) + ("model",)))
+        elif re.search(r"(^|/)S$", p) and leaf.ndim == 5:
+            # rwkv state (L, B, H, hd, hd)
+            spec = P(None, dp, None, None, None) if batch_shardable \
+                else P()
+        elif re.search(r"shift_(t|c)$", p):
+            spec = P(None, dp, None) if batch_shardable else P()
+        else:
+            spec = P()
+        spec = _adjust_for_divisibility(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_cache)
+
+
+def attach(tree, shardings):
+    """ShapeDtypeStructs with shardings attached (for AOT .lower())."""
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                             sharding=sh),
+        tree, shardings)

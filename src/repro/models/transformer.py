@@ -1,0 +1,245 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-prefix variants).
+
+Covers: qwen3-1.7b, minicpm-2b, qwen3-32b, command-r-35b (dense GQA),
+phi3.5-moe, qwen3-moe-235b (MoE every layer), paligemma-3b (vision-prefix
+embeddings + prefix-LM mask).
+
+Layers are scanned (stacked params, `lax.scan`) so the HLO stays O(1) in
+depth — essential for SPMD-partitioning 94-layer models — with optional
+per-layer remat for training memory.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from . import vocab_parallel as vp
+
+Params = dict[str, Any]
+
+
+# ------------------------------------------------------------------ init ---
+def init_layer(cfg: ModelConfig, key) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": L.init_norm(cfg, k1),
+        "attn": L.init_attention(cfg, k2),
+        "ln2": L.init_norm(cfg, k3),
+    }
+    if cfg.n_experts > 0:
+        p["moe"] = L.init_moe(cfg, k4)
+    else:
+        p["mlp"] = L.init_mlp(cfg, k4)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    assert cfg.n_experts == 0 or cfg.moe_every == 1, \
+        "mixed dense/MoE stacks are handled by hybrid.py"
+    ke, kl, kh = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(cfg, k))(layer_keys)
+    p = {
+        "embed": jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) * 0.02,
+        "layers": stacked,
+        "final_norm": L.init_norm(cfg, kh),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab_size)
+    return p
+
+
+# --------------------------------------------------------------- forward ---
+def _block(cfg: ModelConfig, p: Params, x, *, prefix_len=0):
+    h = L.apply_norm(cfg, p["ln1"], x)
+    x = x + L.attention(cfg, p["attn"], h, causal=True, prefix_len=prefix_len)
+    h = L.apply_norm(cfg, p["ln2"], x)
+    if "moe" in p:
+        y, aux = L.apply_moe(cfg, p["moe"], h)
+        return x + y, aux
+    return x + L.apply_mlp(cfg, p["mlp"], h), jnp.float32(0.0)
+
+
+def _embed(cfg: ModelConfig, params: Params, tokens, vision_embeds=None):
+    x = vp.embed_lookup(params["embed"], tokens, cfg.compute_dtype)
+    if cfg.family == "vlm":   # gemma-style embedding scale
+        x = x * math.sqrt(cfg.d_model)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    return L.shard_batch_activation(x)
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens, *,
+                   vision_embeds=None):
+    """tokens (B,T) [+ vision (B,n_vis,D)] -> (final hidden (B,T',D), aux)."""
+    x = _embed(cfg, params, tokens, vision_embeds)
+    prefix_len = vision_embeds.shape[1] if vision_embeds is not None else 0
+
+    def body(carry, p):
+        x, aux = carry
+        x, a = _block(cfg, p, x, prefix_len=prefix_len)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, aux / cfg.n_layers
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, vision_embeds=None):
+    """Full-logit forward (small inputs only — smoke tests / generation)."""
+    x, aux = forward_hidden(cfg, params, tokens, vision_embeds=vision_embeds)
+    return _head(cfg, params, x), aux
+
+
+def _head(cfg: ModelConfig, params: Params, x):
+    w = params["embed"].T if "lm_head" not in params else params["lm_head"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def head_weight(params: Params):
+    return params["embed"].T if "lm_head" not in params else params["lm_head"]
+
+
+def chunked_ce_loss(cfg: ModelConfig, w_head, hidden, labels):
+    """Deprecated dense path — kept for small/no-mesh callers."""
+    b, t, d = hidden.shape
+    h2 = hidden.reshape(b * t, d)
+    lab = labels.reshape(b * t)
+    n = b * t
+    ck = min(cfg.loss_chunk, n)
+    nck = -(-n // ck)
+    pad = nck * ck - n
+    h2 = jnp.pad(h2, ((0, pad), (0, 0)))
+    lab = jnp.pad(lab, ((0, pad),), constant_values=-1)
+    h3 = h2.reshape(nck, ck, d)
+    lab3 = lab.reshape(nck, ck)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        tot, cnt = carry
+        hc, lc = xs
+        logits = (hc @ w_head.astype(hc.dtype)).astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        valid = lc >= 0
+        nll = -jnp.take_along_axis(lp, jnp.maximum(lc, 0)[:, None],
+                                   axis=-1)[:, 0]
+        return (tot + jnp.sum(nll * valid), cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (h3, lab3))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch) -> tuple[jnp.ndarray,
+                                                              dict]:
+    """batch: {tokens (B,T), labels (B,T), [vision_embeds]}; labels < 0 =
+    masked."""
+    hidden, aux = forward_hidden(cfg, params, batch["tokens"],
+                                 vision_embeds=batch.get("vision_embeds"))
+    labels = batch["labels"]
+    if hidden.shape[1] != labels.shape[1]:          # vision prefix positions
+        hidden = hidden[:, hidden.shape[1] - labels.shape[1]:]
+    if "lm_head" in params:
+        loss = vp.cross_entropy(params["lm_head"], hidden, labels,
+                                chunk=cfg.loss_chunk)
+    else:   # tied embeddings: vocab-sharded table, transposed in-kernel
+        loss = vp.cross_entropy(params["embed"], hidden, labels,
+                                chunk=cfg.loss_chunk, transpose_w=True)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+# ----------------------------------------------------------------- decode --
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               dtype=jnp.bfloat16) -> Params:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, seq, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params, tokens):
+    """tokens (B,1) -> (logits (B,1,V) fp32, new cache).  Writes K/V at
+    cache['pos'] and attends over [0..pos]."""
+    pos = cache["pos"]
+    x = _embed(cfg, params, tokens)
+
+    def body(x, xs):
+        p, ck, cv = xs
+        h = L.apply_norm(cfg, p["ln1"], x)
+        a, ck, cv = L.attention_decode(cfg, p["attn"], h, ck, cv, pos)
+        x = x + a
+        h = L.apply_norm(cfg, p["ln2"], x)
+        if "moe" in p:
+            y, _ = L.apply_moe(cfg, p["moe"], h)
+            x = x + y
+        else:
+            x = x + L.apply_mlp(cfg, p["mlp"], h)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = _head(cfg, params, x)
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, cache_len: int,
+            *, vision_embeds=None):
+    """Run the full prompt, return (logits, cache) ready for decode."""
+    x = _embed(cfg, params, tokens, vision_embeds)
+    b, t, _ = x.shape
+    prefix_len = vision_embeds.shape[1] if vision_embeds is not None else 0
+    hd = cfg.resolved_head_dim
+
+    def body(carry, p):
+        x = carry
+        h = L.apply_norm(cfg, p["ln1"], x)
+        pos = jnp.arange(t)[None, :]
+        q, k, v = L._project_qkv(cfg, p["attn"], h, pos)
+        scale = 1.0 / math.sqrt(hd)
+        if t > cfg.attn_chunk_threshold:
+            out = L._sdpa_chunked(q, k, v, scale, chunk=cfg.attn_chunk,
+                                  causal=True, prefix_len=prefix_len)
+        else:
+            i = jnp.arange(t)
+            mask = i[:, None] >= i[None, :]
+            if prefix_len:
+                mask = mask | (i[None, :] < prefix_len)
+            mask = jnp.broadcast_to(mask[None, None], (b, 1, t, t))
+            out = L._sdpa(q, k, v, mask, scale)
+        out = out.reshape(b, t, cfg.n_heads * hd)
+        y = out @ p["attn"]["wo"].astype(x.dtype)
+        if cfg.use_bias:
+            y = y + p["attn"]["bo"].astype(x.dtype)
+        x = x + y
+        h = L.apply_norm(cfg, p["ln2"], x)
+        if "moe" in p:
+            ymoe, _ = L.apply_moe(cfg, p["moe"], h)
+            x = x + ymoe
+        else:
+            x = x + L.apply_mlp(cfg, p["mlp"], h)
+        return x, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = _head(cfg, params, x[:, -1:])
+
+    pad = cache_len - ks.shape[2]
+    cache = {
+        "k": jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+                     ).astype(jnp.bfloat16),
+        "v": jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+                     ).astype(jnp.bfloat16),
+        "pos": jnp.int32(ks.shape[2]),
+    }
+    return logits, cache

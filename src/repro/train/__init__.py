@@ -1,0 +1,4 @@
+from .loop import TrainState, init_state, make_train_step
+from .optimizer import (adafactor, adamw, clip_by_global_norm,
+                        cosine_schedule, get_optimizer, get_schedule,
+                        global_norm, wsd_schedule)

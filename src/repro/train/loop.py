@@ -1,0 +1,96 @@
+"""Training step factory: grad accumulation, clipping, optimizer update,
+metrics — all jit/pjit-compatible.
+
+`make_train_step` returns a pure (state, batch) -> (state, metrics) function
+that the launcher wraps in jax.jit with mesh shardings.  Microbatching runs
+as a lax.scan over microbatch slices so activation memory is bounded by one
+microbatch while the psum of microbatch i overlaps the compute of i+1 under
+XLA's latency-hiding scheduler (the accumulate-in-carry pattern).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from .optimizer import Optimizer, clip_by_global_norm
+
+Pytree = Any
+
+
+@dataclass
+class TrainState:
+    params: Pytree
+    opt_state: Pytree
+    step: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt_state, s.step), None),
+    lambda aux, ch: TrainState(*ch))
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer,
+                    cfg: TrainConfig, grad_shardings=None) -> Callable:
+    """loss_fn: (params, batch) -> (scalar, metrics dict).
+
+    grad_shardings (optional pytree of NamedSharding matching params) pins
+    the gradient accumulator to the parameter layout — without it GSPMD may
+    keep the f32 accumulator replicated across the FSDP axis and all-gather
+    it every microbatch (observed on qwen3-moe-235b; EXPERIMENTS.md §Perf).
+    """
+
+    def split_micro(batch):
+        def r(x):
+            b = x.shape[0]
+            assert b % cfg.microbatches == 0, (b, cfg.microbatches)
+            return x.reshape((cfg.microbatches, b // cfg.microbatches)
+                             + x.shape[1:])
+        return jax.tree.map(r, batch)
+
+    def constrain(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    grad_fn = jax.grad(lambda p, b: loss_fn(p, b)[0], allow_int=False)
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        params = state.params
+        if cfg.microbatches > 1:
+            micro = split_micro(batch)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                loss, _ = loss_fn(params, mb)
+                g = grad_fn(params, mb)
+                g_acc = constrain(jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g))
+                return (g_acc, l_acc + loss), None
+
+            g0 = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, loss_sum), _ = jax.lax.scan(acc_step, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / cfg.microbatches, grads)
+            loss = loss_sum / cfg.microbatches
+        else:
+            loss, _ = loss_fn(params, batch)
+            grads = grad_fn(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               params, state.step)
+        new_state = TrainState(new_params, new_opt, state.step + 1)
+        return new_state, {"loss": loss, "grad_norm": gnorm,
+                           "step": state.step}
+
+    return train_step
+
+
+def init_state(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))

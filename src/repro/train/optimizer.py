@@ -1,0 +1,160 @@
+"""Optimizers + LR schedules in pure JAX (no optax in this container).
+
+AdamW — default.  Adafactor — factored second moment for the >=200B archs
+whose fp32 Adam state cannot fit a single pod (DESIGN.md §8).  Schedules:
+cosine and WSD (warmup-stable-decay, MiniCPM's schedule [arXiv:2404.06395]).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Params = Any
+
+
+# ------------------------------------------------------------- schedules ---
+def cosine_schedule(cfg: TrainConfig) -> Callable:
+    def lr(step):
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                     0.0, 1.0)
+        return cfg.lr * warm * (0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return lr
+
+
+def wsd_schedule(cfg: TrainConfig, stable_frac: float = 0.8) -> Callable:
+    """Warmup -> Stable (constant) -> Decay (linear to 10%)."""
+    def lr(step):
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        decay_start = cfg.warmup_steps + stable_frac * (
+            cfg.total_steps - cfg.warmup_steps)
+        t = jnp.clip((step - decay_start)
+                     / jnp.maximum(cfg.total_steps - decay_start, 1),
+                     0.0, 1.0)
+        return cfg.lr * warm * (1.0 - 0.9 * t)
+    return lr
+
+
+def get_schedule(name: str, cfg: TrainConfig) -> Callable:
+    return {"cosine": cosine_schedule, "wsd": wsd_schedule}[name](cfg)
+
+
+# -------------------------------------------------------------- interface --
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[..., tuple[Params, Any]]   # (grads, state, params, step)
+
+
+def get_optimizer(name: str, cfg: TrainConfig,
+                  schedule: Callable | None = None) -> Optimizer:
+    sched = schedule or get_schedule("cosine", cfg)
+    if name == "adamw":
+        return adamw(cfg, sched)
+    if name == "adafactor":
+        return adafactor(cfg, sched)
+    raise ValueError(name)
+
+
+# ------------------------------------------------------------------ AdamW --
+def adamw(cfg: TrainConfig, sched: Callable) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr = sched(step)
+        b1, b2, eps, wd = cfg.b1, cfg.b2, 1e-8, cfg.weight_decay
+        t = step + 1
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            step_ = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------- Adafactor --
+def adafactor(cfg: TrainConfig, sched: Callable) -> Optimizer:
+    """Factored second moment (Shazeer & Stern 2018): for a (r, c) matrix the
+    state is r + c floats instead of r*c — the 398B-param enabler."""
+    eps = 1e-30
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(st, params,
+                            is_leaf=lambda x: not isinstance(x, dict))
+
+    def update(grads, state, params, step):
+        lr = sched(step)
+        t = step + 1
+        beta2 = 1.0 - t ** -0.8      # Adafactor's decaying beta2
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1, keepdims=True)
+                                       [..., None], eps))
+                u = g / jnp.sqrt(denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g / jnp.sqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (RMS(u) <= 1) per the paper
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        flat_p, tree = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = tree.flatten_up_to(state)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tree.unflatten([o[0] for o in outs])
+        new_s = tree.unflatten([o[1] for o in outs])
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm

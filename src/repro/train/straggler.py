@@ -1,0 +1,70 @@
+"""Straggler mitigation: deadline-skipped microbatches with gradient
+rescaling.
+
+On a 1000+-node cluster the step time is gated by the slowest worker.  The
+standard mitigations we implement / encode:
+
+1. **Deadline-based partial accumulation** (this module, testable on CPU):
+   the host-side loop hands the device a *mask* of microbatches to include;
+   a worker that falls behind the step deadline contributes fewer
+   microbatches and the gradient is rescaled by the number actually
+   contributed (sum(g_i)/n_contributed), keeping the estimator unbiased
+   while bounding step latency.  `DeadlineAccumulator` tracks per-worker
+   microbatch timing and decides the mask.
+
+2. **Backup workers** (design, documented in DESIGN.md): the data pipeline
+   is step-indexed (data/pipeline.py), so any worker can recompute any
+   shard — a backup can take over a straggler's shard without coordination
+   beyond the step counter.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class DeadlineAccumulator:
+    """Host-side controller deciding how many microbatches fit a deadline."""
+    n_micro: int
+    deadline_s: float
+    ema_alpha: float = 0.3
+    _ema_micro_s: float = field(default=0.0, init=False)
+
+    def plan(self) -> int:
+        """How many microbatches to run this step (>=1)."""
+        if self._ema_micro_s <= 0:
+            return self.n_micro
+        fit = int(self.deadline_s // self._ema_micro_s)
+        return int(np.clip(fit, 1, self.n_micro))
+
+    def observe(self, micro_elapsed_s: float) -> None:
+        if self._ema_micro_s == 0:
+            self._ema_micro_s = micro_elapsed_s
+        else:
+            self._ema_micro_s = (self.ema_alpha * micro_elapsed_s
+                                 + (1 - self.ema_alpha) * self._ema_micro_s)
+
+    def run_step(self, micro_fn, microbatches: list) -> tuple[int, float]:
+        """Run up to plan() microbatches under the deadline; returns
+        (n_contributed, elapsed)."""
+        budget = self.plan()
+        t0 = time.perf_counter()
+        n = 0
+        for mb in microbatches[:budget]:
+            ts = time.perf_counter()
+            micro_fn(mb)
+            self.observe(time.perf_counter() - ts)
+            n += 1
+            if time.perf_counter() - t0 > self.deadline_s and n >= 1:
+                break
+        return n, time.perf_counter() - t0
+
+
+def rescale_partial_gradient(grad_sum, n_contributed: int):
+    """Unbiased mean from a partial microbatch sum."""
+    import jax
+    scale = 1.0 / max(n_contributed, 1)
+    return jax.tree.map(lambda g: g * scale, grad_sum)

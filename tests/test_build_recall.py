@@ -1,0 +1,45 @@
+"""Vamana build quality: the static index must reach high recall@10."""
+import numpy as np
+import pytest
+
+from repro.core import build_engine, brute_force_knn
+from repro.data import synthetic_vectors
+
+
+@pytest.fixture(scope="module")
+def built():
+    vecs = synthetic_vectors(2000, 32, n_clusters=24, seed=0)
+    eng = build_engine(vecs, R=16, L_build=40, max_c=64, seed=0)
+    return vecs, eng
+
+
+def test_build_recall_at_10(built):
+    vecs, eng = built
+    rng = np.random.default_rng(1)
+    queries = vecs[rng.choice(len(vecs), 50, replace=False)] \
+        + 0.01 * rng.normal(size=(50, vecs.shape[1])).astype(np.float32)
+    gt = brute_force_knn(vecs, queries, 10)
+    got = eng.search(queries, k=10, L=60)
+    recall = np.mean([len(set(got[i]) & set(gt[i])) / 10
+                      for i in range(len(queries))])
+    assert recall >= 0.9, f"recall@10 = {recall}"
+
+
+def test_build_structural_invariants(built):
+    _, eng = built
+    eng.index.check_invariants()
+    # every vertex reachable-ish: degree >= 1
+    idx = eng.index
+    live = np.flatnonzero(idx.alive)
+    deg = (idx.neighbors[live] >= 0).sum(axis=1)
+    assert (deg >= 1).all()
+    # degrees at most R after build (R' slack unused until patches)
+    assert (deg <= idx.params.R).all()
+
+
+def test_topology_synced_after_build(built):
+    _, eng = built
+    idx = eng.index
+    assert idx.topo_stale_rows() == 0
+    np.testing.assert_array_equal(idx.topo_neighbors[:idx.slots_in_use],
+                                  idx.neighbors[:idx.slots_in_use])

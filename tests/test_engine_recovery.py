@@ -1,0 +1,156 @@
+"""Fault tolerance of the ANN engine: WAL replay + atomic checkpoints,
+plus ΔG/page accounting units and engine property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (StreamingEngine, build_engine, IOSimulator,
+                        IOCounters, PAGE_SIZE)
+from repro.core.deltag import DeltaG
+from repro.core.index import IndexParams
+from repro.data import synthetic_vectors
+
+
+@pytest.fixture(scope="module")
+def small_engine_factory(tmp_path_factory):
+    vecs = synthetic_vectors(800, 32, n_clusters=8, seed=3)
+
+    def make(engine="greator", wal_dir=None):
+        return vecs, build_engine(vecs, engine=engine, R=12, L_build=32,
+                                  max_c=48, batch_size=10**9,
+                                  wal_dir=wal_dir, seed=3)
+    return make
+
+
+def test_checkpoint_restore_roundtrip(small_engine_factory, tmp_path):
+    vecs, eng = small_engine_factory()
+    for i in range(5):
+        eng.delete(i)
+        eng.insert(vecs[i] + 0.01, 800 + i)
+    eng.flush()
+    ck = tmp_path / "ckpt"
+    eng.checkpoint(str(ck))
+    restored = StreamingEngine.restore(str(ck), batch_size=10**9)
+    idx0, idx1 = eng.index, restored.index
+    n = idx0.slots_in_use
+    assert idx1.slots_in_use == n
+    np.testing.assert_array_equal(idx0.neighbors[:n], idx1.neighbors[:n])
+    np.testing.assert_array_equal(idx0.alive[:n], idx1.alive[:n])
+    np.testing.assert_allclose(idx0.vectors[:n], idx1.vectors[:n])
+    assert list(idx0.free_q) == list(idx1.free_q)
+    assert idx0.entry_id == idx1.entry_id
+    restored.index.check_invariants()
+    # restored engine keeps serving and updating
+    q = vecs[:4]
+    np.testing.assert_array_equal(eng.search(q, k=5), restored.search(q, k=5))
+    restored.insert(vecs[10] * 1.01)
+    restored.flush()
+
+
+def test_wal_replay_after_crash(small_engine_factory, tmp_path):
+    wal = str(tmp_path / "wal")
+    vecs, eng = small_engine_factory(wal_dir=wal)
+    ck = tmp_path / "ck"
+    eng.checkpoint(str(ck))
+    # stage updates that never get flushed -> "crash"
+    eng.delete(1)
+    eng.delete(2)
+    eng.insert(vecs[0] + 0.05, 900)
+    del eng  # crash before flush
+
+    # restart: restore checkpoint, WAL replays the pending ops
+    eng2 = StreamingEngine.restore(str(ck), batch_size=10**9, wal_dir=wal)
+    assert sorted(eng2.pending_deletes) == [1, 2]
+    assert [vid for vid, _ in eng2.pending_inserts] == [900]
+    eng2.flush()
+    assert eng2.index.slot_of(1) == -1
+    assert eng2.index.slot_of(900) >= 0
+    eng2.index.check_invariants()
+
+
+def test_wal_truncated_after_flush(small_engine_factory, tmp_path):
+    import os
+    wal = str(tmp_path / "wal2")
+    vecs, eng = small_engine_factory(wal_dir=wal)
+    eng.delete(5)
+    assert os.path.exists(os.path.join(wal, "wal.jsonl"))
+    eng.flush()
+    assert not os.path.exists(os.path.join(wal, "wal.jsonl"))
+
+
+# --------------------------------------------------------------- ΔG unit --
+def test_deltag_groups_by_page_and_dedups():
+    dg = DeltaG()
+    dg.add_reverse_edge(src_slot=10, src_page=2, new_nbr_slot=77)
+    dg.add_reverse_edge(src_slot=10, src_page=2, new_nbr_slot=77)  # dup
+    dg.add_reverse_edge(src_slot=10, src_page=2, new_nbr_slot=78)
+    dg.add_reverse_edge(src_slot=11, src_page=2, new_nbr_slot=79)
+    dg.add_reverse_edge(src_slot=40, src_page=5, new_nbr_slot=80)
+    assert dg.n_edges == 4
+    assert dg.n_pages == 2
+    assert dg.n_vertices == 3
+    pages = dict(dg.pages())
+    assert pages[2][10] == {77, 78}
+    assert pages[2][11] == {79}
+    assert pages[5][40] == {80}
+    dg.clear()
+    assert dg.n_edges == 0 and dg.n_pages == 0
+
+
+# ----------------------------------------------------------- IO sim unit --
+def test_io_simulator_dedups_within_batch():
+    io = IOSimulator()
+    assert io.rand_read("f", [1, 2, 2, 3]) == 3
+    assert io.rand_read("f", [2, 3, 4]) == 1      # cached
+    io.reset_cache()
+    assert io.rand_read("f", [2]) == 1            # cache cleared
+    io.seq_read(10 * PAGE_SIZE)
+    c = io.counters
+    assert c.rand_read_pages == 5
+    assert c.read_bytes == 5 * PAGE_SIZE + 10 * PAGE_SIZE
+    t = io.modeled_time()
+    assert t > 0
+
+
+def test_io_counters_arithmetic():
+    a = IOCounters(seq_read_bytes=10, rand_read_pages=2)
+    b = IOCounters(seq_read_bytes=4, rand_write_pages=1)
+    s = a + b
+    assert s.seq_read_bytes == 14 and s.rand_read_pages == 2
+    d = s - b
+    assert d.seq_read_bytes == 10 and d.rand_write_pages == 0
+
+
+def test_index_params_page_math():
+    p = IndexParams(dim=128, R=32, R_relaxed=33)   # SIFT-like
+    assert p.record_bytes == 128 * 4 + 4 + 33 * 4
+    assert p.vertices_per_page == PAGE_SIZE // p.record_bytes == 6
+    g = IndexParams(dim=960, R=32, R_relaxed=33)   # GIST-like
+    assert g.vertices_per_page == 1
+
+
+# ------------------------------------------------------ engine property ---
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_random_update_sequences_keep_invariants(seed):
+    rng = np.random.default_rng(seed)
+    vecs = synthetic_vectors(300, 16, n_clusters=4, seed=seed)
+    eng = build_engine(vecs[:250], engine="greator", R=8, L_build=24,
+                       max_c=32, batch_size=10**9, seed=seed)
+    live = set(range(250))
+    nid = 250
+    for _ in range(3):
+        ops = rng.integers(2, 6)
+        for _ in range(ops):
+            if rng.random() < 0.5 and len(live) > 50:
+                vid = int(rng.choice(np.fromiter(live, np.int64)))
+                eng.delete(vid)
+                live.discard(vid)
+            else:
+                eng.insert(vecs[nid % 300] + rng.normal(size=16).astype(
+                    np.float32) * 0.01, nid)
+                live.add(nid)
+                nid += 1
+        eng.flush()
+        eng.index.check_invariants()
+        assert eng.index.n_alive == len(live)

@@ -1,0 +1,109 @@
+"""Tests pinned to the paper's own mechanisms and examples.
+
+- Fig. 3 semantics: deleting the only bridge to a region must not make its
+  vertices unreachable — the repair reconnects in-neighbors of the deleted
+  vertex to (similar) out-neighbors.
+- ASNR threshold T: T=0 (always Algorithm 1) triggers strictly more delete
+  prunes than T=2 (Algorithm 2 path).
+- Relaxed limit R': strict-R patching triggers strictly more patch prunes.
+- IP-DiskANN periodic full scans (ip_cleanup_every) charge read I/O.
+"""
+import numpy as np
+import pytest
+
+from repro.core import IOSimulator, StreamingEngine, build_vamana
+from repro.core.index import IndexParams
+from repro.core.update import EngineConfig
+from repro.data import streaming_workload, synthetic_vectors
+
+
+@pytest.fixture(scope="module")
+def base_index():
+    vecs = synthetic_vectors(1500, 48, n_clusters=10, seed=21)
+    idx = build_vamana(vecs, params=IndexParams(dim=48, R=14, R_relaxed=15),
+                       L_build=36, max_c=56, seed=21)
+    return vecs, idx
+
+
+def _run(idx, engine, cfg, batches):
+    eng = StreamingEngine(idx.clone(io=IOSimulator()), engine=engine,
+                          cfg=cfg, batch_size=10**9)
+    stats = []
+    for b in batches:
+        for vid, v in b.insert_items:
+            eng.insert(v, vid)
+        for vid in b.delete_ids:
+            eng.delete(vid)
+        stats.append(eng.flush())
+    return eng, stats
+
+
+@pytest.fixture(scope="module")
+def batches(base_index):
+    vecs, _ = base_index
+    all_vecs = np.concatenate(
+        [vecs, synthetic_vectors(200, 48, n_clusters=10, seed=22)])
+    _, _, bs = streaming_workload(
+        1700, 48, batch_frac=0.01, n_batches=3, vectors=all_vecs,
+        base_frac=1500 / 1700, seed=23)
+    return list(bs)
+
+
+def test_fig3_bridge_deletion_keeps_target_reachable(base_index):
+    """Delete every graph predecessor's favourite hub en-route to a target;
+    the repaired graph must still navigate from the medoid to the target."""
+    vecs, idx = base_index
+    eng = StreamingEngine(idx.clone(), engine="greator", batch_size=10**9)
+    rng = np.random.default_rng(3)
+    # pick a far-from-medoid target and delete ALL its current in-neighbors'
+    # bridges: the target's own out/in neighborhood
+    target = int(rng.integers(0, 1500))
+    tslot = eng.index.slot_of(target)
+    nbrs = [int(x) for x in eng.index.get_neighbors(tslot)]
+    victims = [int(eng.index._slot_owner[s]) for s in nbrs[:5]
+               if eng.index.alive[s]]
+    victims = [v for v in victims if v != target and v != eng.index.entry_id]
+    for v in victims:
+        eng.delete(v)
+    eng.flush()
+    got = eng.search(vecs[target][None], k=5, L=96)[0]
+    assert target in set(got), (target, got)
+
+
+def test_asnr_threshold_reduces_prunes(base_index, batches):
+    _, idx = base_index
+    _, st_asnr = _run(idx, "greator", EngineConfig(T=2, max_c=56), batches)
+    _, st_naive = _run(idx, "greator", EngineConfig(T=0, max_c=56), batches)
+    p_asnr = sum(s.delete_prunes for s in st_asnr)
+    p_naive = sum(s.delete_prunes for s in st_naive)
+    assert p_asnr < p_naive, (p_asnr, p_naive)
+
+
+def test_relaxed_limit_reduces_patch_prunes(base_index, batches):
+    _, idx = base_index
+    _, st_rel = _run(idx, "greator", EngineConfig(T=2, max_c=56), batches)
+    _, st_strict = _run(idx, "greator",
+                        EngineConfig(T=2, max_c=56,
+                                     strict_patch_limit=True), batches)
+    p_rel = sum(s.patch_prunes for s in st_rel)
+    p_strict = sum(s.patch_prunes for s in st_strict)
+    assert p_rel < p_strict, (p_rel, p_strict)
+
+
+def test_ipdiskann_periodic_cleanup_charges_scan(base_index, batches):
+    _, idx = base_index
+    _, st_no = _run(idx, "ipdiskann", EngineConfig(max_c=56), batches)
+    _, st_scan = _run(idx, "ipdiskann",
+                      EngineConfig(max_c=56, ip_cleanup_every=1), batches)
+    r_no = sum(s.io.seq_read_bytes for s in st_no)
+    r_scan = sum(s.io.seq_read_bytes for s in st_scan)
+    assert r_scan > r_no + 3 * idx.file_bytes() * 0.9  # ~1 full scan/batch
+
+
+def test_deleted_never_returned(base_index, batches):
+    vecs, idx = base_index
+    eng, _ = _run(idx, "greator", EngineConfig(max_c=56), batches)
+    deleted = [vid for b in batches for vid in b.delete_ids]
+    qs = vecs[np.asarray(deleted[:20]) % 1500]
+    got = eng.search(qs.astype(np.float32), k=10, L=64)
+    assert not (set(got.ravel().tolist()) & set(deleted)), "deleted id returned"

@@ -1,0 +1,67 @@
+"""Product quantizer: reconstruction, ADC ordering, recall through the
+beam search on decoded vectors, and the compression ratio."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import brute_force_knn
+from repro.core.pq import ProductQuantizer
+from repro.data import synthetic_vectors
+
+
+@pytest.fixture(scope="module")
+def pq_setup():
+    vecs = synthetic_vectors(2000, 64, n_clusters=16, seed=31)
+    pq = ProductQuantizer.fit(vecs, m=16, k=64, iters=15)
+    codes = pq.encode(vecs)
+    return vecs, pq, codes
+
+
+def test_shapes_and_compression(pq_setup):
+    vecs, pq, codes = pq_setup
+    assert codes.shape == (2000, 16) and codes.dtype == np.uint8
+    assert pq.bytes_per_vector() == 16          # 16x vs fp32 at d=64
+    rec = pq.decode(codes)
+    assert rec.shape == vecs.shape
+
+
+def test_reconstruction_beats_mean(pq_setup):
+    vecs, pq, codes = pq_setup
+    rec = pq.decode(codes)
+    err = np.mean((rec - vecs) ** 2)
+    base = np.mean((vecs - vecs.mean(0)) ** 2)
+    assert err < base * 0.12, (err, base)       # >88% variance explained
+
+
+def test_adc_matches_decoded_distance(pq_setup):
+    vecs, pq, codes = pq_setup
+    q = vecs[17] + 0.01
+    adc = pq.adc(q, codes[:50])
+    dec = ((pq.decode(codes[:50]) - q) ** 2).sum(1)
+    np.testing.assert_allclose(adc, dec, rtol=1e-4, atol=1e-3)
+
+
+def test_adc_topk_recall(pq_setup):
+    """PQ top-10 by ADC must overlap heavily with exact top-10."""
+    vecs, pq, codes = pq_setup
+    rng = np.random.default_rng(0)
+    hits = []
+    for qi in rng.choice(2000, 25, replace=False):
+        q = vecs[qi] + 0.01 * rng.normal(size=64).astype(np.float32)
+        exact = set(brute_force_knn(vecs, q[None], 10)[0].tolist())
+        approx = set(np.argsort(pq.adc(q, codes))[:10].tolist())
+        hits.append(len(exact & approx) / 10)
+    assert np.mean(hits) >= 0.65, np.mean(hits)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.sampled_from([2, 4, 8]), seed=st.integers(0, 50))
+def test_pq_properties(m, seed):
+    vecs = synthetic_vectors(300, 32, n_clusters=4, seed=seed)
+    pq = ProductQuantizer.fit(vecs, m=m, k=16, iters=6, seed=seed)
+    codes = pq.encode(vecs)
+    assert codes.max() < 16
+    # ADC of a vector against its own code ~= its reconstruction error
+    adc_self = pq.adc(vecs[0], codes[:1])[0]
+    rec_err = ((pq.decode(codes[:1])[0] - vecs[0]) ** 2).sum()
+    np.testing.assert_allclose(adc_self, rec_err, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,179 @@
+"""Unit + property tests for the jitted beam search and RobustPrune."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prune import robust_prune
+from repro.core.search import batch_beam_search, beam_search
+
+
+def _ring_graph(n, r):
+    """Vertices on a line, each connected to its r nearest by index."""
+    nbr = np.full((n, r), -1, np.int32)
+    for i in range(n):
+        cands = [j for off in range(1, r // 2 + 2)
+                 for j in (i - off, i + off) if 0 <= j < n]
+        nbr[i, :r] = (cands + [-1] * r)[:r]
+    return nbr
+
+
+def test_beam_search_finds_nearest_on_line():
+    """1-d line dataset: greedy routing must find the exact NN."""
+    n, d = 200, 4
+    vecs = np.zeros((n, d), np.float32)
+    vecs[:, 0] = np.arange(n)
+    nbr = _ring_graph(n, 8)
+    q = np.zeros((d,), np.float32)
+    q[0] = 137.3
+    res = beam_search(jnp.asarray(vecs), jnp.asarray(nbr), jnp.asarray(q),
+                      jnp.asarray([0], jnp.int32), L=16, W=2)
+    assert int(res.ids[0]) == 137
+    # monotone sorted pool
+    dd = np.asarray(res.dists)
+    assert (np.diff(dd[np.isfinite(dd)]) >= 0).all()
+
+
+def test_beam_search_batched_matches_single():
+    n, d = 300, 16
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    nbr = rng.integers(0, n, size=(n, 12)).astype(np.int32)
+    qs = rng.normal(size=(5, d)).astype(np.float32)
+    batch = batch_beam_search(jnp.asarray(vecs), jnp.asarray(nbr),
+                              jnp.asarray(qs),
+                              jnp.asarray([0], jnp.int32), L=32, W=4)
+    for b in range(5):
+        single = beam_search(jnp.asarray(vecs), jnp.asarray(nbr),
+                             jnp.asarray(qs[b]),
+                             jnp.asarray([0], jnp.int32), L=32, W=4)
+        np.testing.assert_array_equal(np.asarray(batch.ids[b]),
+                                      np.asarray(single.ids))
+
+
+def test_beam_search_no_duplicate_results():
+    n, d = 500, 8
+    rng = np.random.default_rng(1)
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    nbr = rng.integers(0, n, size=(n, 10)).astype(np.int32)
+    q = rng.normal(size=(d,)).astype(np.float32)
+    res = beam_search(jnp.asarray(vecs), jnp.asarray(nbr), jnp.asarray(q),
+                      jnp.asarray([3], jnp.int32), L=48, W=4)
+    ids = np.asarray(res.ids)
+    ids = ids[ids >= 0]
+    assert len(ids) == len(np.unique(ids)), "duplicate ids in result pool"
+
+
+def test_beam_search_visited_log_and_stats():
+    n, d = 100, 8
+    rng = np.random.default_rng(2)
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    nbr = rng.integers(0, n, size=(n, 6)).astype(np.int32)
+    q = rng.normal(size=(d,)).astype(np.float32)
+    res = beam_search(jnp.asarray(vecs), jnp.asarray(nbr), jnp.asarray(q),
+                      jnp.asarray([0], jnp.int32), L=16, W=2)
+    visited = np.asarray(res.visited)
+    visited = visited[visited >= 0]
+    assert len(visited) > 0
+    assert len(visited) == len(np.unique(visited)), "a vertex visited twice"
+    assert int(res.n_hops) >= 1
+    assert int(res.n_dist) >= len(visited)
+
+
+# ---------------------------------------------------------------- prune ----
+def test_robust_prune_keeps_nearest_and_caps_R():
+    rng = np.random.default_rng(3)
+    C, d, R = 40, 16, 8
+    cvecs = rng.normal(size=(C, d)).astype(np.float32)
+    p = rng.normal(size=(d,)).astype(np.float32)
+    ids = np.arange(C, dtype=np.int32)
+    res = robust_prune(jnp.asarray(p), jnp.asarray(ids), jnp.asarray(cvecs),
+                       jnp.float32(1.2), R=R)
+    kept = np.asarray(res.ids)
+    kept = kept[kept >= 0]
+    assert 1 <= len(kept) <= R
+    # nearest candidate always survives
+    dists = ((cvecs - p) ** 2).sum(axis=1)
+    assert int(np.argmin(dists)) == int(kept[0])
+    assert int(res.n_kept) == len(kept)
+
+
+def test_robust_prune_alpha_monotone():
+    """Bigger alpha prunes less aggressively -> keeps >= as many."""
+    rng = np.random.default_rng(4)
+    C, d, R = 64, 8, 16
+    cvecs = rng.normal(size=(C, d)).astype(np.float32)
+    p = np.zeros((d,), np.float32)
+    ids = np.arange(C, dtype=np.int32)
+    kept_counts = []
+    for alpha in [1.0, 1.2, 2.0]:
+        res = robust_prune(jnp.asarray(p), jnp.asarray(ids),
+                           jnp.asarray(cvecs), jnp.float32(alpha), R=R)
+        kept_counts.append(int(res.n_kept))
+    assert kept_counts[0] <= kept_counts[1] <= kept_counts[2]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), c=st.integers(2, 50),
+       r=st.integers(1, 12), n_invalid=st.integers(0, 10))
+def test_robust_prune_properties(seed, c, r, n_invalid):
+    rng = np.random.default_rng(seed)
+    d = 8
+    cvecs = rng.normal(size=(c + n_invalid, d)).astype(np.float32)
+    ids = np.concatenate([np.arange(c), np.full(n_invalid, -1)]).astype(
+        np.int32)
+    p = rng.normal(size=(d,)).astype(np.float32)
+    res = robust_prune(jnp.asarray(p), jnp.asarray(ids), jnp.asarray(cvecs),
+                       jnp.float32(1.2), R=r)
+    kept = np.asarray(res.ids)
+    valid = kept[kept >= 0]
+    # no invalid ids kept, no duplicates, count cap
+    assert (valid < c).all()
+    assert len(valid) == len(np.unique(valid))
+    assert len(valid) <= r
+    assert len(valid) >= min(1, c)
+    # alpha-occlusion invariant: each kept c_j is not dominated by an
+    # earlier-kept c_i:  NOT (alpha * d(c_i, c_j) <= d(p, c_j)).
+    # robust_prune applies alpha to METRIC distances, so with squared-L2
+    # the domination threshold is alpha^2 (DiskANN semantics).
+    a2 = 1.2 ** 2
+    dp = ((cvecs[valid] - p) ** 2).sum(axis=1)
+    for j in range(1, len(valid)):
+        for i in range(j):
+            dij = ((cvecs[valid[i]] - cvecs[valid[j]]) ** 2).sum()
+            assert not (a2 * dij <= dp[j] + 1e-5), (i, j)
+
+
+def test_int8_vector_search_recall():
+    """Hillclimb C (EXPERIMENTS.md §Perf): int8-quantized vector rows halve
+    the gather traffic; recall must stay within a point of fp32."""
+    from repro.core import brute_force_knn, build_vamana
+    from repro.core.index import IndexParams
+    from repro.data import synthetic_vectors
+
+    vecs = synthetic_vectors(1500, 32, n_clusters=12, seed=11)
+    idx = build_vamana(vecs, params=IndexParams(dim=32, R=16, R_relaxed=17),
+                       L_build=40, max_c=64, seed=11)
+    n = idx.slots_in_use
+    scale = float(np.abs(vecs).max() / 127.0)
+    q8 = np.clip(np.round(vecs / scale), -127, 127).astype(np.int8)
+
+    rng = np.random.default_rng(12)
+    qsel = rng.choice(1500, 40, replace=False)
+    queries = vecs[qsel] + 0.01 * rng.normal(size=(40, 32)).astype(np.float32)
+    gt = brute_force_knn(vecs, queries, 10)
+
+    def recall(vtab, vec_scale):
+        res = batch_beam_search(
+            jnp.asarray(vtab), jnp.asarray(idx.neighbors[:n]),
+            jnp.asarray(queries), jnp.asarray([0], jnp.int32),
+            L=64, W=4, vec_scale=vec_scale)
+        ids = np.asarray(res.ids)[:, :10]
+        return np.mean([len(set(ids[i]) & set(gt[i])) / 10
+                        for i in range(40)])
+
+    r_fp = recall(vecs[:n], None)
+    r_q8 = recall(q8[:n], scale)
+    assert r_fp >= 0.9
+    assert r_q8 >= r_fp - 0.05, (r_fp, r_q8)

@@ -1,0 +1,225 @@
+"""Training substrate tests: optimizers, schedules, train loop, grad
+accumulation, checkpoint/restore (+ elastic reshard), gradient compression,
+straggler mitigation, data pipeline determinism, serving engine."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.distributed import (compressed_psum, init_error_feedback,
+                               quantize_int8, dequantize_int8)
+from repro.models import get_model
+from repro.train import (get_optimizer, get_schedule, init_state,
+                         make_train_step)
+from repro.train.checkpoint import (latest_checkpoint, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.straggler import DeadlineAccumulator
+
+
+def _quadratic_setup(opt_name):
+    tcfg = TrainConfig(lr=0.05, warmup_steps=0, total_steps=200,
+                       weight_decay=0.0)
+    opt = get_optimizer(opt_name, tcfg)
+    target = jnp.array([[1.0, -2.0], [0.5, 3.0]])
+    params = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum((p["b"] - 1.0) ** 2)
+    return opt, params, loss, target
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_optimizer_converges_quadratic(opt_name):
+    opt, params, loss, target = _quadratic_setup(opt_name)
+    state = opt.init(params)
+    for step in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.int32(step))
+    assert float(loss(params)) < 1e-2, float(loss(params))
+
+
+def test_schedules():
+    tcfg = TrainConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    cos = get_schedule("cosine", tcfg)
+    assert float(cos(0)) == 0.0
+    assert abs(float(cos(10)) - 1.0) < 1e-6
+    assert float(cos(100)) < 0.01
+    wsd = get_schedule("wsd", tcfg)
+    assert abs(float(wsd(10)) - 1.0) < 1e-6
+    assert abs(float(wsd(50)) - 1.0) < 1e-6          # stable phase
+    assert 0.05 < float(wsd(100)) < 0.15             # decayed to ~10%
+
+
+def test_train_step_decreases_loss_and_accum_matches():
+    cfg = get_config("qwen3_1_7b").reduced()
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(1)
+    toks = jax.random.randint(rng, (4, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=0, total_steps=100,
+                       microbatches=1)
+    opt = get_optimizer("adamw", tcfg)
+    step1 = jax.jit(make_train_step(api.loss, opt, tcfg))
+    s = init_state(params, opt)
+    losses = []
+    for _ in range(5):
+        s, m = step1(s, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+    # grad-accum (4 microbatches) must match the single-batch step exactly
+    tcfg4 = TrainConfig(lr=1e-3, warmup_steps=0, total_steps=100,
+                        microbatches=4)
+    step4 = jax.jit(make_train_step(api.loss, opt, tcfg4))
+    sA, _ = step1(init_state(params, opt), batch)
+    sB, _ = step4(init_state(params, opt), batch)
+    # microbatch losses average not exactly equal (per-microbatch masking),
+    # but with full-length labels each microbatch has equal weight:
+    for a, b in zip(jax.tree.leaves(sA.params), jax.tree.leaves(sB.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-5)
+
+
+def test_checkpoint_restore_and_resume(tmp_path):
+    cfg = get_config("qwen3_1_7b").reduced()
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=0, total_steps=100)
+    opt = get_optimizer("adamw", tcfg)
+    step = jax.jit(make_train_step(api.loss, opt, tcfg))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    s = init_state(params, opt)
+    for _ in range(3):
+        s, _ = step(s, batch)
+    save_checkpoint(str(tmp_path), s, step=3)
+
+    # crash + restart
+    path = latest_checkpoint(str(tmp_path))
+    assert path and path.endswith("step_00000003")
+    s2 = restore_checkpoint(path, jax.eval_shape(lambda: s))
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # training continues identically from the restored state
+    sA, mA = step(s, batch)
+    sB, mB = step(s2, batch)
+    np.testing.assert_allclose(float(mA["loss"]), float(mB["loss"]),
+                               rtol=1e-6)
+
+
+ELASTIC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np, sys
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint
+ckpt = sys.argv[1]
+
+mesh4 = jax.make_mesh((4,), ("data",),
+                      axis_types=(jax.sharding.AxisType.Auto,))
+x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+xs = jax.device_put(x, NamedSharding(mesh4, P("data", None)))
+save_checkpoint(ckpt, {"x": xs}, step=0)
+
+# elastic restore onto a DIFFERENT mesh (8-way)
+mesh8 = jax.make_mesh((8,), ("data",),
+                      axis_types=(jax.sharding.AxisType.Auto,))
+tgt = jax.eval_shape(lambda: {"x": x})
+out = restore_checkpoint(os.path.join(ckpt, "step_00000000"), tgt,
+                         shardings={"x": NamedSharding(mesh8, P("data", None))})
+assert out["x"].sharding.num_devices == 8
+np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(x))
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_reshard_across_meshes(tmp_path):
+    """Save on a 4-device mesh, restore onto 8 devices (subprocess keeps the
+    main test session at 1 device)."""
+    r = subprocess.run(
+        [sys.executable, "-c", ELASTIC_SCRIPT, str(tmp_path)],
+        capture_output=True, text=True, env={"PYTHONPATH": "src",
+                                             "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo", timeout=300)
+    assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ------------------------------------------------------ grad compression --
+def test_int8_quantization_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 64)) * 3.0
+    q, s = quantize_int8(x)
+    err = np.asarray(dequantize_int8(q, s) - x)
+    amax = float(jnp.max(jnp.abs(x)))
+    assert np.abs(err).max() <= amax / 127.0 + 1e-6
+
+
+def test_compressed_psum_with_error_feedback_converges():
+    """EF accumulation: averaged quantized psum tracks the true mean over
+    steps — the residual never diverges."""
+    import functools
+    n_dev = 1  # single device: psum over a size-1 axis via vmap-style trick
+    g_true = jax.random.normal(jax.random.PRNGKey(1), (32, 32))
+
+    def one_step(err):
+        f = lambda g, e: compressed_psum(g, e, "i")
+        mean, new_err = jax.vmap(f, axis_name="i")(g_true[None], err[None])
+        return mean[0], new_err[0]
+
+    err = jnp.zeros_like(g_true)
+    for _ in range(3):
+        mean, err = one_step(err)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(g_true),
+                               atol=0.05)
+    assert float(jnp.max(jnp.abs(err))) < 0.05
+
+
+# ------------------------------------------------------------- straggler --
+def test_deadline_accumulator_cuts_microbatches():
+    acc = DeadlineAccumulator(n_micro=8, deadline_s=0.05)
+    import time as _t
+    slow = lambda mb: _t.sleep(0.02)
+    n, elapsed = acc.run_step(slow, list(range(8)))
+    assert 1 <= n < 8                       # deadline cut it short
+    assert acc.plan() <= 4                  # learned the per-micro cost
+
+
+# ---------------------------------------------------------------- pipeline --
+def test_pipeline_determinism_and_sharding():
+    base = dict(vocab_size=128, seq_len=32, global_batch=4, seed=7)
+    p1 = TokenPipeline(PipelineConfig(**base))
+    p2 = TokenPipeline(PipelineConfig(**base))
+    b1, b2 = p1.batch_at(5), p2.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # host sharding partitions the same global batch
+    h0 = TokenPipeline(PipelineConfig(**base, n_hosts=2, host_id=0))
+    h1 = TokenPipeline(PipelineConfig(**base, n_hosts=2, host_id=1))
+    g = np.concatenate([h0.batch_at(5)["tokens"], h1.batch_at(5)["tokens"]])
+    np.testing.assert_array_equal(g, b1["tokens"])
+    # labels are next-token
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+# ------------------------------------------------------------------ serve --
+def test_serve_engine_waves():
+    cfg = get_config("qwen3_1_7b").reduced()
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    from repro.serve import ServeEngine
+    eng = ServeEngine(api, params, n_slots=2, cache_len=64)
+    rids = [eng.submit([5, 6, 7], max_tokens=4) for _ in range(5)]
+    done = eng.run_until_done()
+    assert len(done) == 5
+    for r in done:
+        assert 1 <= len(r.out) <= 4
+        assert all(0 <= t < cfg.vocab_size for t in r.out)
