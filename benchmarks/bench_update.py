@@ -143,6 +143,23 @@ def fig15_space_cost() -> None:
              f"ratio={(q + t) / q:.3f}x")
 
 
+def device_h2d_transfer() -> None:
+    """Host->device transfer bytes next to throughput.  Each engine clones
+    the base index, so its view materializes with ONE full upload on the
+    first batch; the steady-state proof is that full_uploads stays at 1
+    while every subsequent sync is a localized scatter."""
+    for ds in BENCH_DATASETS:
+        res = run_all_systems(ds)
+        for system in SYSTEMS:
+            c = res[system]["engine"].index.device_view.counters
+            emit(f"device_h2d/{ds}/{system}", 0.0,
+                 f"full_uploads={c.full_uploads} "
+                 f"full_MB={c.full_bytes / 1e6:.1f} "
+                 f"scatters={c.scatter_uploads} "
+                 f"scatter_MB={c.scatter_bytes / 1e6:.2f} "
+                 f"scatter_rows={c.scatter_rows}")
+
+
 def fig16_topo_time() -> None:
     for ds in BENCH_DATASETS:
         res = run_all_systems(ds)
@@ -176,4 +193,4 @@ def fig2_topo_fraction() -> None:
 
 ALL = [fig1_motivation_affected, fig2_topo_fraction, fig8_update_throughput,
        fig9_io_amount, fig10_prune_rates, fig14_ablation, fig15_space_cost,
-       fig16_topo_time]
+       fig16_topo_time, device_h2d_transfer]

@@ -18,6 +18,7 @@ from .index import GraphIndex, IndexParams
 from .prune import batched_robust_prune
 from .search import batch_beam_search
 from .storage import IOSimulator
+from .update import _dedup_pack_rows
 
 
 def find_medoid(vectors: np.ndarray) -> int:
@@ -64,13 +65,14 @@ def build_vamana(
             sel = order[c0:c0 + chunk]
             _build_chunk(idx, sel, medoid_slot, L_build, alpha_pass, max_c)
     idx.sync_topology(charge_io=False)
-    idx.invalidate_device()
     return idx
 
 
 def _build_chunk(idx: GraphIndex, sel: np.ndarray, medoid_slot: int,
                  L_build: int, alpha: float, max_c: int) -> None:
-    dev_vecs, dev_nbrs = idx.device_arrays()
+    # delta-synced mirrors: only the neighbor rows the previous chunk
+    # touched are re-uploaded, not the whole index (device_view.py)
+    dev_vecs, dev_nbrs, _ = idx.device_arrays()
     queries = jnp.asarray(idx.vectors[sel])
     entry = jnp.asarray([medoid_slot], jnp.int32)
     res = batch_beam_search(dev_vecs, dev_nbrs, queries, entry,
@@ -78,11 +80,9 @@ def _build_chunk(idx: GraphIndex, sel: np.ndarray, medoid_slot: int,
     visited = np.asarray(res.visited)
 
     B = len(sel)
-    cand = np.full((B, max_c), -1, np.int32)
-    for b in range(B):
-        vs = np.concatenate([visited[b], idx.neighbors[sel[b]]])
-        vs = np.unique(vs[(vs >= 0) & (vs != sel[b])])[:max_c]
-        cand[b, :len(vs)] = vs
+    ext = np.concatenate([visited, idx.neighbors[sel]], axis=1).astype(np.int64)
+    ext = np.where(ext == np.asarray(sel)[:, None], -1, ext)  # no self loops
+    cand = _dedup_pack_rows(ext, max_c)
     cvecs = idx.vectors[np.maximum(cand, 0)]
     pres = batched_robust_prune(
         queries, jnp.asarray(cand), jnp.asarray(cvecs), alpha,
@@ -107,12 +107,14 @@ def _build_chunk(idx: GraphIndex, sel: np.ndarray, medoid_slot: int,
     if overflow:
         C = max_c
         B2 = len(overflow)
-        cand2 = np.full((B2, C), -1, np.int32)
-        pv = np.zeros((B2, idx.params.dim), np.float32)
-        for i, (slot, cands) in enumerate(overflow):
-            cands = np.unique(cands[(cands >= 0) & (cands != slot)])[:C]
-            cand2[i, :len(cands)] = cands
-            pv[i] = idx.vectors[slot]
+        slots2 = np.fromiter((s for s, _ in overflow), np.int64, B2)
+        width = max(len(c) for _, c in overflow)
+        raw = np.full((B2, width), -1, np.int64)
+        for i, (_, cands) in enumerate(overflow):
+            raw[i, :len(cands)] = cands
+        raw = np.where(raw == slots2[:, None], -1, raw)
+        cand2 = _dedup_pack_rows(raw, C)
+        pv = idx.vectors[slots2].astype(np.float32)
         cvecs2 = idx.vectors[np.maximum(cand2, 0)]
         pres2 = batched_robust_prune(
             jnp.asarray(pv), jnp.asarray(cand2), jnp.asarray(cvecs2),
@@ -120,7 +122,6 @@ def _build_chunk(idx: GraphIndex, sel: np.ndarray, medoid_slot: int,
         kept2 = np.asarray(pres2.ids)
         for i, (slot, _) in enumerate(overflow):
             idx.set_neighbors(slot, kept2[i][kept2[i] >= 0])
-    idx.invalidate_device()
 
 
 def brute_force_knn(vectors: np.ndarray, queries: np.ndarray,

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .build import build_vamana
-from .index import QUERY_FILE, GraphIndex, IndexParams
+from .index import GraphIndex, IndexParams
 from .search import batch_beam_search
 from .storage import IOSimulator
 from .update import ENGINES, BatchStats, EngineConfig
@@ -56,6 +56,7 @@ class StreamingEngine:
         self.pending_deletes: list[int] = []
         self.pending_inserts: list[tuple[int, np.ndarray]] = []
         self.batch_history: list[BatchStats] = []
+        self._pending_delete_set: set[int] = set()
         self.search_stats = SearchStats()
         self.wal_dir = wal_dir
         self._next_id = (max((int(v) for v in index._local_map), default=-1)
@@ -74,8 +75,25 @@ class StreamingEngine:
         return vid
 
     def delete(self, vid: int) -> None:
-        self.pending_deletes.append(int(vid))
-        self._wal_append("D", int(vid), None)
+        """Stage a deletion.  Validated eagerly so a bad id fails at the
+        call site with a clear error instead of a bare KeyError surfacing
+        from `release_slot` at flush time."""
+        vid = int(vid)
+        if vid in self._pending_delete_set:
+            raise KeyError(
+                f"delete({vid}): vertex already has a pending delete in "
+                "this batch (double delete)")
+        if self.index.slot_of(vid) < 0:
+            if any(v == vid for v, _ in self.pending_inserts):
+                raise KeyError(
+                    f"delete({vid}): vertex is a pending insert that has "
+                    "not been flushed yet — call flush() first")
+            raise KeyError(
+                f"delete({vid}): unknown vertex id (never inserted or "
+                "already deleted)")
+        self.pending_deletes.append(vid)
+        self._pending_delete_set.add(vid)
+        self._wal_append("D", vid, None)
         self._maybe_flush()
 
     def flush(self) -> BatchStats | None:
@@ -85,6 +103,7 @@ class StreamingEngine:
                                         self.pending_inserts)
         self.batch_history.append(stats)
         self.pending_deletes, self.pending_inserts = [], []
+        self._pending_delete_set.clear()
         self._wal_truncate()
         return stats
 
@@ -96,9 +115,11 @@ class StreamingEngine:
     # -------------------------------------------------------------- search
     def search(self, queries: np.ndarray, k: int = 10, L: int = 120,
                W: int = 4) -> np.ndarray:
-        """Returns external ids, (B, k); -1 pads.  Alive-filtered."""
+        """Returns external ids, (B, k); -1 pads.  Alive-filtered in-kernel:
+        the device-resident alive mask excludes deleted vertices from the
+        result window inside beam search, so no per-query host loop runs."""
         idx = self.index
-        dev_vecs, dev_nbrs = idx.device_arrays()
+        dev_vecs, dev_nbrs, dev_alive = idx.device_arrays()
         entry_slot = idx.slot_of(idx.entry_id)
         if entry_slot < 0:  # entry was deleted: fall back to any alive slot
             entry_slot = int(np.flatnonzero(idx.alive)[0])
@@ -106,31 +127,29 @@ class StreamingEngine:
         t0 = time.perf_counter()
         res = batch_beam_search(
             dev_vecs, dev_nbrs, jnp.asarray(queries, jnp.float32),
-            jnp.asarray([entry_slot], jnp.int32),
+            jnp.asarray([entry_slot], jnp.int32), dev_alive,
             L=L, W=W, metric=idx.params.metric)
         ids = np.asarray(res.ids)
-        dists = np.asarray(res.dists)
         elapsed = time.perf_counter() - t0
         # per-query latency: beam search is embarrassingly parallel across
         # queries; we record per-query compute as elapsed/B plus the modeled
         # I/O of its own visited pages (queries are batched only for the
-        # simulator's convenience).
+        # simulator's convenience).  Unique-page counts are computed for the
+        # whole batch at once: sort each row's page ids and count distinct
+        # valid entries.
         B = queries.shape[0]
-        visited = np.asarray(res.visited)
-        for b in range(B):
-            v = visited[b]
-            v = v[v >= 0]
-            pages = len(np.unique(idx.page_of(v)))
-            io_t = pages / idx.io.cost.rand_read_iops
-            self.search_stats.latencies_s.append(elapsed / B + io_t)
-        # alive filter + slot->external-id mapping
+        pages = idx.page_of(np.asarray(res.visited))   # -1 slots stay < 0
+        pages.sort(axis=1)
+        n_pages = ((pages[:, :1] >= 0).astype(np.int64).ravel()
+                   + ((pages[:, 1:] != pages[:, :-1])
+                      & (pages[:, 1:] >= 0)).sum(axis=1))
+        io_t = n_pages / idx.io.cost.rand_read_iops
+        self.search_stats.latencies_s.extend((elapsed / B + io_t).tolist())
+        # slot -> external-id mapping (results arrive already compacted)
         out = np.full((B, k), -1, np.int64)
-        for b in range(B):
-            row = ids[b]
-            ok = (row >= 0) & idx.alive[np.maximum(row, 0)] \
-                & np.isfinite(dists[b])
-            ext = idx._slot_owner[row[ok]][:k]
-            out[b, :len(ext)] = ext
+        top = ids[:, :k]
+        out[:, :top.shape[1]] = np.where(
+            top >= 0, idx._slot_owner[np.maximum(top, 0)], -1)
         return out
 
     # ------------------------------------------------------ WAL + checkpoint
@@ -164,6 +183,7 @@ class StreamingEngine:
                     self._next_id = max(self._next_id, vid + 1)
                 else:
                     self.pending_deletes.append(int(rec["vid"]))
+                    self._pending_delete_set.add(int(rec["vid"]))
 
     def checkpoint(self, path: str) -> None:
         os.makedirs(path, exist_ok=True)

@@ -14,17 +14,19 @@ Two coupled stores, exactly as the paper lays them out on disk:
 
 Arrays live in numpy on the host (the host owns index mutation, the
 accelerator owns distance math — mirroring the paper's CPU-orchestrates /
-SIMD-computes split); device copies for jitted search are cached and
-invalidated on mutation.
+SIMD-computes split).  Device copies for jitted search are owned by a
+`DeviceIndexView` (device_view.py): mutations mark dirty slots and the view
+uploads only those rows — the accelerator mirror is as localized as the
+index file (see DESIGN.md).
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
 
-import jax.numpy as jnp
 import numpy as np
 
+from .device_view import DeviceIndexView
 from .storage import PAGE_SIZE, IOSimulator
 
 QUERY_FILE = "query_index"
@@ -82,9 +84,8 @@ class GraphIndex:
         self.topo_neighbors = np.full_like(self.neighbors, -1)
         self._topo_dirty: set[int] = set()
 
-        # device-side caches for jitted search
-        self._dev_vectors = None
-        self._dev_neighbors = None
+        # device mirror with localized delta uploads (DESIGN.md)
+        self.device_view = DeviceIndexView(self)
 
     # ------------------------------------------------------------------ slots
     def slot_of(self, vid: int) -> int:
@@ -119,11 +120,20 @@ class GraphIndex:
         return slot
 
     def release_slot(self, vid: int) -> int:
-        """Deletion: drop from Local_Map, recycle slot via Free_Q."""
-        slot = self._local_map.pop(int(vid))
+        """Deletion: drop from Local_Map, recycle slot via Free_Q.
+
+        Raises KeyError with a diagnosable message on unknown or
+        already-deleted ids (a bare dict KeyError used to escape here).
+        """
+        slot = self._local_map.pop(int(vid), -1)
+        if slot < 0:
+            raise KeyError(
+                f"release_slot({vid}): vertex is not in the index — it was "
+                "never inserted or has already been deleted")
         self.alive[slot] = False
         self._slot_owner[slot] = -1
         self.free_q.append(slot)
+        self.device_view.mark_alive(slot)
         return slot
 
     def _grow(self) -> None:
@@ -178,7 +188,8 @@ class GraphIndex:
         self.vectors[slot] = vec
         self.set_neighbors(slot, nbr_slots)
         self.alive[slot] = True
-        self.invalidate_device()
+        self.device_view.mark_vector(slot)
+        self.device_view.mark_alive(slot)
 
     def set_neighbors(self, slot: int, nbr_slots) -> None:
         nbr = np.asarray(nbr_slots, np.int32)
@@ -187,7 +198,25 @@ class GraphIndex:
         row[: len(nbr)] = nbr
         self.neighbors[slot] = row
         self._topo_dirty.add(int(slot))
-        self._dev_neighbors = None
+        self.device_view.mark_neighbors(slot)
+
+    def set_neighbors_batch(self, slots: np.ndarray,
+                            rows: np.ndarray) -> None:
+        """Bulk `set_neighbors`: rows must already be left-packed int32 with
+        -1 padding (e.g. from the engines' vectorized dedup); columns beyond
+        R' are dropped, short rows are padded."""
+        if len(slots) == 0:
+            return
+        slots = np.asarray(slots, np.int64)
+        rows = np.asarray(rows, np.int32)
+        width = self.params.R_relaxed
+        out = np.full((len(slots), width), -1, np.int32)
+        w = min(width, rows.shape[1])
+        out[:, :w] = rows[:, :w]
+        self.neighbors[slots] = out
+        sl = [int(s) for s in slots]
+        self._topo_dirty.update(sl)
+        self.device_view.mark_neighbors_batch(sl)
 
     def get_neighbors(self, slot: int) -> np.ndarray:
         row = self.neighbors[slot]
@@ -232,15 +261,22 @@ class GraphIndex:
 
     # ------------------------------------------------------------ device view
     def invalidate_device(self) -> None:
-        self._dev_vectors = None
-        self._dev_neighbors = None
+        """Drop the device mirror entirely (full re-upload on next use).
+
+        Only needed after shape changes or out-of-band bulk writes to the
+        host arrays (e.g. checkpoint restore); tracked mutations go through
+        the view's localized scatter path instead.
+        """
+        self.device_view.invalidate()
 
     def device_arrays(self):
-        if self._dev_vectors is None:
-            self._dev_vectors = jnp.asarray(self.vectors)
-        if self._dev_neighbors is None:
-            self._dev_neighbors = jnp.asarray(self.neighbors)
-        return self._dev_vectors, self._dev_neighbors
+        """(vectors, neighbors, alive) device mirrors, delta-synced.
+
+        Previously returned handles are invalidated by the next call after
+        a mutation (buffers are donated to the scatter) — re-fetch, don't
+        cache across mutations.
+        """
+        return self.device_view.arrays()
 
     # ------------------------------------------------------------- integrity
     def check_invariants(self) -> None:

@@ -9,9 +9,11 @@ scores the new candidates, and re-sorts.  All shapes are static so the whole
 search jits and vmaps over a query batch.
 
 The search may route *through* deleted vertices (FreshDiskANN semantics for
-streaming indexes — dangling edges are tolerated during navigation); deleted
-vertices are filtered from the result window by the caller using the alive
-mask.  The visited log is returned both as the candidate pool for index
+streaming indexes — dangling edges are tolerated during navigation); when an
+`alive` mask is passed, deleted vertices are excluded from the result window
+*in-kernel* (masked to -1/+inf and stably re-sorted out of the window) so no
+host-side postprocessing loop is needed.  The visited log is returned both
+as the candidate pool for index
 construction (Vamana uses V(visited) as the prune candidate set) and for I/O
 accounting (one visited vertex == one random page read in the paper's cost
 model).
@@ -59,6 +61,7 @@ def beam_search(
     neighbors: jnp.ndarray,    # (N, Rcap) int32, -1 padded
     query: jnp.ndarray,        # (d,)
     entry_ids: jnp.ndarray,    # (E,) int32 starting points (-1 = absent)
+    alive: jnp.ndarray | None = None,  # (N,) bool — in-kernel result filter
     *,
     L: int = 64,
     W: int = 4,
@@ -145,13 +148,27 @@ def beam_search(
             jnp.int32(0), jnp.int32(e))
     pool_ids, pool_dists, pool_vis, visited_log, it, n_dist = (
         jax.lax.while_loop(cond, body, init))
-    return SearchResult(pool_ids[:L], pool_dists[:L], visited_log, it, n_dist)
+    win_ids, win_dists = pool_ids[:L], pool_dists[:L]
+    if alive is not None:
+        # exclude deleted vertices from the result window: they stay
+        # routable during navigation (dangling-edge tolerance above) but are
+        # compacted out of the returned top-L here.  The stable argsort
+        # keeps the relative order of surviving entries identical to a
+        # host-side `window[alive[window]]` filter.
+        ok = (win_ids >= 0) & alive[jnp.clip(win_ids, 0, n - 1)] \
+            & jnp.isfinite(win_dists)
+        win_dists = jnp.where(ok, win_dists, jnp.inf)
+        win_ids = jnp.where(ok, win_ids, -1)
+        order = jnp.argsort(win_dists)
+        win_ids, win_dists = win_ids[order], win_dists[order]
+    return SearchResult(win_ids, win_dists, visited_log, it, n_dist)
 
 
-def batch_beam_search(vectors, neighbors, queries, entry_ids, **kw):
+def batch_beam_search(vectors, neighbors, queries, entry_ids, alive=None,
+                      **kw):
     """vmapped beam search: queries (B, d), entry_ids (B, E) or (E,)."""
     if entry_ids.ndim == 1:
         entry_ids = jnp.broadcast_to(entry_ids, (queries.shape[0],) + entry_ids.shape)
     fn = functools.partial(beam_search, **kw)
-    return jax.vmap(fn, in_axes=(None, None, 0, 0))(
-        vectors, neighbors, queries, entry_ids)
+    return jax.vmap(fn, in_axes=(None, None, 0, 0, None))(
+        vectors, neighbors, queries, entry_ids, alive)

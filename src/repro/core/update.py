@@ -81,6 +81,46 @@ class EngineConfig:
     strict_patch_limit: bool = False   # ablation: disable the relaxed R' 
 
 
+def _bucket_size(n: int) -> int:
+    """Smallest padded batch size >= n from {2^k, 3·2^(k-1)}.
+
+    Pure power-of-two buckets waste up to 50% of the vmapped kernel lanes
+    (the paper's 0.1% batches often land just above a power of two); adding
+    the 1.5x midpoints halves the worst-case padding at the cost of at most
+    twice the compile count.
+    """
+    if n <= 2:
+        return max(n, 1)
+    p = 1 << (n - 1).bit_length()
+    if 3 * (p // 4) >= n:
+        return 3 * (p // 4)
+    return p
+
+
+def _mask_pack_rows(rows: np.ndarray, bad: np.ndarray) -> np.ndarray:
+    """Mask `bad` entries to -1 and left-pack survivors per row, preserving
+    their order (stable argsort on the validity mask)."""
+    s = np.where(bad, -1, rows)
+    order = np.argsort(s < 0, axis=1, kind="stable")
+    return np.take_along_axis(s, order, axis=1)
+
+
+def _dedup_pack_rows(rows: np.ndarray, width: int) -> np.ndarray:
+    """Row-wise `np.unique(x[x >= 0])[:width]`, vectorized over the batch.
+
+    Sorts each row, masks duplicates and negatives to -1, then left-packs
+    the survivors (stable argsort on the mask keeps them ascending).
+    Returns (B, width) int32 with -1 padding.
+    """
+    s = np.sort(np.asarray(rows, np.int64), axis=1)
+    dup = np.zeros(s.shape, bool)
+    dup[:, 1:] = s[:, 1:] == s[:, :-1]
+    s = _mask_pack_rows(s, dup | (s < 0))
+    if s.shape[1] < width:
+        s = np.pad(s, ((0, 0), (0, width - s.shape[1])), constant_values=-1)
+    return s[:, :width].astype(np.int32)
+
+
 class _EngineBase:
     name = "base"
 
@@ -123,25 +163,27 @@ class _EngineBase:
 
     def _charge_search_reads(self, visited: np.ndarray) -> None:
         v = visited[visited >= 0]
-        self.index.io.rand_read(QUERY_FILE, self.index.page_of(v))
+        # unique pages up front: the simulator dedups too, but with numpy
+        # instead of a Python set over every visited vertex
+        self.index.io.rand_read(QUERY_FILE, np.unique(self.index.page_of(v)))
 
     def _run_insert_searches(self, vecs: np.ndarray, stats: BatchStats):
         """Batched beam search for insert candidate generation.  The query
         batch is padded to a power-of-two bucket (one compile per bucket)."""
         idx = self.index
-        dev_vecs, dev_nbrs = idx.device_arrays()
+        dev_vecs, dev_nbrs, _ = idx.device_arrays()
         entry = jnp.asarray(self._medoid_entries(), jnp.int32)
         B = len(vecs)
-        Bp = 1 << (B - 1).bit_length()
+        Bp = _bucket_size(B)
         vpad = np.zeros((Bp, vecs.shape[1]), np.float32)
         vpad[:B] = vecs
         res = batch_beam_search(
             dev_vecs, dev_nbrs, jnp.asarray(vpad), entry,
             L=self.cfg.L_build, W=self.cfg.W, metric=idx.params.metric)
         stats.n_dist += int(np.sum(np.asarray(res.n_dist[:B])))
-        visited = np.asarray(res.visited)[:B]
-        for b in range(B):
-            self._charge_search_reads(visited[b])
+        # the simulator dedups pages per batch, so one flattened charge
+        # equals the old per-query loop
+        self._charge_search_reads(np.asarray(res.visited)[:B].ravel())
         return res._replace(ids=res.ids[:B], dists=res.dists[:B],
                             visited=res.visited[:B])
 
@@ -160,16 +202,23 @@ class _EngineBase:
         idx = self.index
         C = self.cfg.max_c
         B = len(items)
-        Bp = 1 << (B - 1).bit_length()          # shape bucket
+        Bp = _bucket_size(B)                    # shape bucket
+        width = max(len(c) for _, c in items)
+        raw = np.full((B, max(width, 1)), -1, np.int64)
+        for i, (_, cands) in enumerate(items):
+            raw[i, :len(cands)] = cands
         cand = np.full((Bp, C), -1, np.int32)
-        pv = np.zeros((Bp, idx.params.dim), np.float32)
-        for i, (slot, cands) in enumerate(items):
-            cands = np.unique(cands[cands >= 0])[:C]
-            cand[i, :len(cands)] = cands
-            pv[i] = idx.vectors[slot]
-        cvecs = idx.vectors[np.maximum(cand, 0)]
+        cand[:B] = _dedup_pack_rows(raw, C)
+        slots = np.zeros((Bp,), np.int64)
+        slots[:B] = np.fromiter((s for s, _ in items), np.int64, B)
+        # gather candidate/pivot vectors from the delta-synced device
+        # mirror instead of a host gather + re-upload of the same rows
+        dev_vecs, _, _ = idx.device_arrays()
+        cand_j = jnp.asarray(np.maximum(cand, 0))
         res = batched_robust_prune(
-            jnp.asarray(pv), jnp.asarray(cand), jnp.asarray(cvecs),
+            jnp.take(dev_vecs, jnp.asarray(slots), axis=0),
+            jnp.asarray(cand),
+            jnp.take(dev_vecs, cand_j, axis=0),
             alpha, R=idx.params.R, metric=idx.params.metric)
         stats.n_dist += int(np.sum(np.asarray(res.n_dist[:B])))
         kept = np.asarray(res.ids)
@@ -185,16 +234,14 @@ class _EngineBase:
             chunk = insert_items[i:i + ck]
             vecs = np.stack([v for _, v in chunk]).astype(np.float32)
             res = self._run_insert_searches(vecs, stats)
-            visited = np.asarray(res.visited)
-            B = len(chunk)
-            cand = np.full((B, C), -1, np.int32)
-            for b in range(B):
-                vs = visited[b]
-                vs = np.unique(vs[vs >= 0])[:C]
-                cand[b, :len(vs)] = vs
-            cvecs = idx.vectors[np.maximum(cand, 0)]
+            cand = _dedup_pack_rows(np.asarray(res.visited), C)
+            # candidate vectors come straight off the device mirror (the
+            # search just synced it) — no host gather, no re-upload
+            dev_vecs, _, _ = idx.device_arrays()
+            cvecs = jnp.take(dev_vecs, jnp.asarray(np.maximum(cand, 0)),
+                             axis=0)
             pres = batched_robust_prune(
-                jnp.asarray(vecs), jnp.asarray(cand), jnp.asarray(cvecs),
+                jnp.asarray(vecs), jnp.asarray(cand), cvecs,
                 self.cfg.alpha, R=idx.params.R, metric=idx.params.metric)
             stats.n_dist += int(np.sum(np.asarray(pres.n_dist)))
             kept = np.asarray(pres.ids)
@@ -208,7 +255,6 @@ class _EngineBase:
                     idx.io.rand_write(QUERY_FILE, [int(idx.page_of(slot))])
                 for nb in nbrs:
                     self._stage_reverse_edge(int(nb), slot)
-            idx.invalidate_device()
 
     # phases/hooks implemented by subclasses
     localized_writes = True
@@ -272,7 +318,6 @@ class GreatorEngine(_EngineBase):
 
         # (4) write the modified pages back (localized).
         idx.io.rand_write(QUERY_FILE, idx.page_of(affected))
-        idx.invalidate_device()
         return deleted_slots
 
     # ------------------------------------------------- insert hook: ΔG cache
@@ -282,33 +327,51 @@ class GreatorEngine(_EngineBase):
 
     # ----------------------------------------------------------------- patch
     def _patch_phase(self, stats) -> None:
+        """Fold the staged reverse edges (ΔG) into their vertices' rows.
+
+        One read-modify-write per touched page, as in the paper; the merge
+        itself runs as one vectorized pass over every staged vertex instead
+        of a per-page/per-vertex Python loop.
+        """
         idx = self.index
         limit = idx.params.R if self.cfg.strict_patch_limit \
             else getattr(idx.params, self.patch_limit_attr)
-        to_prune: list[tuple[int, np.ndarray]] = []
+        page_ids: list[int] = []
+        slots_l: list[int] = []
+        edges_l: list[set[int]] = []
         for page_id, vertex_tbl in self.deltag.pages():
-            idx.io.rand_read(QUERY_FILE, [page_id])
+            page_ids.append(page_id)
             for slot, new_edges in vertex_tbl.items():
-                if not idx.alive[slot]:
-                    continue  # vertex deleted after edge was staged
-                stats.patch_updates += 1
-                cur = idx.get_neighbors(slot)
-                merged = np.unique(np.concatenate(
-                    [cur, np.fromiter(new_edges, np.int32)]))
-                merged = merged[(merged >= 0) & (merged != slot)]
-                # drop edges to dead slots
-                merged = merged[idx.alive[merged]]
-                if len(merged) > limit:
-                    # RELAXED limit exceeded -> prune back to strict R
-                    stats.patch_prunes += 1
-                    to_prune.append((slot, merged))
-                else:
-                    idx.set_neighbors(slot, merged)
-            idx.io.rand_write(QUERY_FILE, [page_id])
+                if idx.alive[slot]:     # vertex may be deleted post-staging
+                    slots_l.append(slot)
+                    edges_l.append(new_edges)
+        idx.io.rand_read(QUERY_FILE, page_ids)
+        to_prune: list[tuple[int, np.ndarray]] = []
+        if slots_l:
+            stats.patch_updates += len(slots_l)
+            slots = np.array(slots_l, np.int64)
+            emax = max(len(e) for e in edges_l)
+            staged = np.full((len(slots), emax), -1, np.int64)
+            for i, e in enumerate(edges_l):
+                staged[i, :len(e)] = np.fromiter(e, np.int64, len(e))
+            cur = idx.neighbors[slots].astype(np.int64)
+            merged = _dedup_pack_rows(
+                np.concatenate([cur, staged], axis=1),
+                cur.shape[1] + emax)
+            merged = _mask_pack_rows(
+                merged,
+                (merged < 0) | (merged == slots[:, None])
+                | ~idx.alive[np.maximum(merged, 0)])
+            deg = (merged >= 0).sum(axis=1)
+            over = deg > limit          # RELAXED limit exceeded -> prune
+            stats.patch_prunes += int(over.sum())
+            idx.set_neighbors_batch(slots[~over], merged[~over])
+            to_prune = [(int(s), row[row >= 0].astype(np.int32))
+                        for s, row in zip(slots[over], merged[over])]
+        idx.io.rand_write(QUERY_FILE, page_ids)
         for slot, row in self._prune_batch(to_prune, self.cfg.alpha, stats):
             idx.set_neighbors(slot, row)
         self.deltag.clear()
-        idx.invalidate_device()
 
     def _sync_topology(self) -> int:
         return self.index.sync_topology(charge_io=True)
@@ -362,7 +425,6 @@ class FreshDiskANNEngine(_EngineBase):
         # modified blocks stream to the temporary intermediate file.
         idx.io.seq_write(
             len(np.unique(idx.page_of(affected))) * 4096)
-        idx.invalidate_device()
         return deleted_slots
 
     # ----------------------------------------------------------------- patch
@@ -389,7 +451,6 @@ class FreshDiskANNEngine(_EngineBase):
         for slot, row in self._prune_batch(to_prune, self.cfg.alpha, stats):
             idx.set_neighbors(slot, row)
         self.delta.clear()
-        idx.invalidate_device()
 
     def _sync_topology(self) -> int:
         # FreshDiskANN has no separate topology file; the full rewrite above
@@ -422,10 +483,10 @@ class IPDiskANNEngine(GreatorEngine):
         # (1) in-neighbor discovery: ANN search around each deleted vector
         #     (l_d queue) — random reads, no full scan, but much more search
         #     I/O than a topology scan.
-        dev_vecs, dev_nbrs = idx.device_arrays()
+        dev_vecs, dev_nbrs, _ = idx.device_arrays()
         entry = jnp.asarray(self._medoid_entries(), jnp.int32)
         B = len(del_vecs)
-        Bp = 1 << (B - 1).bit_length()
+        Bp = _bucket_size(B)
         vpad = np.zeros((Bp, del_vecs.shape[1]), np.float32)
         vpad[:B] = del_vecs
         res = batch_beam_search(
@@ -436,6 +497,8 @@ class IPDiskANNEngine(GreatorEngine):
 
         ranked = rank_deleted_neighborhoods(
             idx.vectors, idx.neighbors, deleted_slots, deleted_set)
+        # ranking scored each deleted vertex's surviving out-neighbors once
+        stats.n_dist += sum(len(r) for r in ranked.values())
 
         to_prune: list[tuple[int, np.ndarray]] = []
         repaired: set[int] = set()
@@ -449,19 +512,18 @@ class IPDiskANNEngine(GreatorEngine):
                         & idx.alive[cands]]
             repl = ranked.get(int(v), np.empty(0, np.int32))[:cfg.ip_c]
             for p in inn:
+                # a vertex may be repaired for several deleted vertices;
+                # count it once
                 p = int(p)
-                if p in repaired:
-                    pass  # may be repaired for several deleted vertices
-                stats.delete_repairs += not (p in repaired)
-                repaired.add(p)
+                if p not in repaired:
+                    stats.delete_repairs += 1
+                    repaired.add(p)
                 row = idx.get_neighbors(p)
-                row = row[[int(x) not in deleted_set for x in row]] \
-                    if len(row) else row
+                row = row[~np.isin(row, deleted_slots)]
                 merged = np.unique(np.concatenate(
                     [row.astype(np.int32), repl.astype(np.int32)]))
                 merged = merged[(merged >= 0) & (merged != p)]
                 merged = merged[idx.alive[merged]]
-                stats.n_dist += len(repl)
                 if len(merged) > idx.params.R:   # strict limit -> prune
                     stats.delete_prunes += 1
                     to_prune.append((p, merged))
@@ -476,7 +538,6 @@ class IPDiskANNEngine(GreatorEngine):
         # IP-DiskANN requires periodic full scans to clear them.
         if cfg.ip_cleanup_every and (self.batch_no + 1) % cfg.ip_cleanup_every == 0:
             idx.io.seq_read(idx.file_bytes())
-        idx.invalidate_device()
         return deleted_slots
 
 

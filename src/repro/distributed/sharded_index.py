@@ -80,23 +80,23 @@ class ShardedEngine:
 
     def search(self, queries: np.ndarray, k: int = 10, L: int = 64
                ) -> np.ndarray:
-        """Fan-out + merge."""
+        """Fan-out + merge (vectorized: one distance matrix per shard,
+        one global argsort — no per-query/per-candidate host loops)."""
         parts = [s.search(queries, k=k, L=L) for s in self.shards]
-        out = np.full((len(queries), k), -1, np.int64)
-        for qi in range(len(queries)):
-            cands = []
-            for s, part in enumerate(parts):
-                eng = self.shards[s]
-                for vid in part[qi]:
-                    if vid >= 0:
-                        slot = eng.index.slot_of(int(vid))
-                        d = float(((eng.index.vectors[slot]
-                                    - queries[qi]) ** 2).sum())
-                        cands.append((d, int(vid)))
-            cands.sort()
-            top = [v for _, v in cands[:k]]
-            out[qi, :len(top)] = top
-        return out
+        q = np.asarray(queries, np.float32)
+        all_ids = np.concatenate(parts, axis=1)            # (B, S*k)
+        all_d = np.full(all_ids.shape, np.inf, np.float32)
+        for s, eng in enumerate(self.shards):
+            ids_s = parts[s]
+            slots = eng.index.slots_of(ids_s.ravel()).reshape(ids_s.shape)
+            valid = (ids_s >= 0) & (slots >= 0)
+            vecs = eng.index.vectors[np.maximum(slots, 0)]  # (B, k, d)
+            d = ((vecs - q[:, None, :]) ** 2).sum(axis=-1)
+            all_d[:, s * k:(s + 1) * k] = np.where(valid, d, np.inf)
+        order = np.argsort(all_d, axis=1, kind="stable")[:, :k]
+        top = np.take_along_axis(all_ids, order, axis=1)
+        top_d = np.take_along_axis(all_d, order, axis=1)
+        return np.where(np.isfinite(top_d), top, -1)
 
     def checkpoint(self, path: str) -> None:
         import os
@@ -116,6 +116,8 @@ def make_distributed_search(mesh, *, L: int = 64, W: int = 4, k: int = 10,
 
     vectors  (S*Nl, d)   sharded P(("pod","data"), None)  — row shards
     neighbors(S*Nl, Rcap) same sharding (slot ids are shard-local)
+    alive    (S*Nl,)     same row sharding — deleted slots are excluded
+                         from each shard's result window in-kernel
     entries  (S,)        one entry slot per shard
     queries  (B, d)      replicated
     returns  (B, k) global ids + (B, k) distances
@@ -123,11 +125,11 @@ def make_distributed_search(mesh, *, L: int = 64, W: int = 4, k: int = 10,
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     n_shards = int(np.prod([mesh.shape[a] for a in dp]))
 
-    def local(vecs, nbrs, entry, queries):
-        # one shard: local beam search over its slice
+    def local(vecs, nbrs, alive, entry, queries):
+        # one shard: local beam search over its slice, alive-filtered
         fn = functools.partial(beam_search, L=L, W=W, vec_scale=vec_scale)
-        res = jax.vmap(fn, in_axes=(None, None, 0, None))(
-            vecs, nbrs, queries, entry.reshape(1))
+        res = jax.vmap(fn, in_axes=(None, None, 0, None, None))(
+            vecs, nbrs, queries, entry.reshape(1), alive)
         ids = res.ids[:, :k]                        # local slot ids
         dists = res.dists[:, :k]
         shard = jax.lax.axis_index(dp[0]) if len(dp) == 1 else (
@@ -148,7 +150,7 @@ def make_distributed_search(mesh, *, L: int = 64, W: int = 4, k: int = 10,
     vspec = P(dp, None)
     return jax.shard_map(
         local, mesh=mesh,
-        in_specs=(vspec, vspec, P(dp), P(None, None)),
+        in_specs=(vspec, vspec, P(dp), P(dp), P(None, None)),
         out_specs=(P(None, None), P(None, None)),
         check_vma=False,
     )

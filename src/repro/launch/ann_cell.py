@@ -58,14 +58,15 @@ def ann_cell_args(shape: AnnShape, mesh, *, dtype=jnp.bfloat16):
     vectors = sds((shape.n_vectors, shape.dim), dtype, sharding=vspec)
     idx_dtype = jnp.int16 if shape.idx16 else jnp.int32
     neighbors = sds((shape.n_vectors, shape.rcap), idx_dtype, sharding=vspec)
-    entries = sds((n_shards,), jnp.int32,
-                  sharding=jax.sharding.NamedSharding(mesh, P(dp)))
+    rowspec = jax.sharding.NamedSharding(mesh, P(dp))
+    alive = sds((shape.n_vectors,), jnp.bool_, sharding=rowspec)
+    entries = sds((n_shards,), jnp.int32, sharding=rowspec)
     queries = sds((shape.batch, shape.dim), jnp.bfloat16,
                   sharding=jax.sharding.NamedSharding(mesh, P(None, None)))
     fn = make_distributed_search(
         mesh, L=shape.L, W=shape.W, k=shape.k,
         vec_scale=(1.0 / 32.0) if shape.int8 else None)
-    return fn, (vectors, neighbors, entries, queries)
+    return fn, (vectors, neighbors, alive, entries, queries)
 
 
 def ann_analytic(shape: AnnShape, n_chips: int):

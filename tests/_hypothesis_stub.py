@@ -1,0 +1,148 @@
+"""Offline stand-in for `hypothesis` so the suite collects without network.
+
+The container has no `hypothesis` wheel and no network; four test modules
+import `given/settings/strategies` at module scope, which used to error the
+whole collection.  This shim implements the tiny subset those tests use on
+top of seeded `random` draws: each `@given` test runs `max_examples` times
+with examples drawn from a PRNG seeded by the test's qualified name, so
+failures are deterministic and reproducible.
+
+Installed by tests/conftest.py only when the real package is missing — with
+`hypothesis` installed, the genuine article is used and this file is inert.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(False); the example is skipped."""
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied
+        return _Strategy(draw)
+
+
+def integers(min_value=-(2 ** 31), max_value=2 ** 31 - 1):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+def tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def lists(elements, min_size=0, max_size=10, **_kw):
+    return _Strategy(lambda rng: [
+        elements.draw(rng)
+        for _ in range(rng.randint(min_size, max_size))])
+
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_kw):
+    """Decorator form only (the subset the suite uses)."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise TypeError(
+            "hypothesis stub supports keyword strategies only "
+            "(@given(x=st.integers(...)))")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            executed = 0
+            for _ in range(n):
+                try:  # a .filter() that never matches skips the example
+                    drawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                except _Unsatisfied:
+                    continue
+                try:
+                    fn(*args, **kwargs, **drawn)
+                    executed += 1
+                except _Unsatisfied:
+                    continue
+            if executed == 0:
+                raise RuntimeError(
+                    f"hypothesis stub: no example satisfied the strategy "
+                    f"filters/assume() for {fn.__qualname__} — the property "
+                    "was never exercised (vacuous test)")
+        # pytest resolves fixtures from the (wrapped) signature: hide the
+        # strategy-supplied parameters, keep any genuine fixture params
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in kw_strategies])
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this module as `hypothesis` + `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "just",
+                 "tuples", "lists"):
+        setattr(strat, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = strat
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None)
+    hyp.__version__ = "0.0-stub"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

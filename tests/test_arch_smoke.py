@@ -9,6 +9,8 @@ import pytest
 from repro.configs import ARCHS, get_config
 from repro.models import abstract_params, get_model
 
+pytestmark = pytest.mark.slow  # per-arch model compiles: excluded from the fast tier
+
 B, T = 2, 16
 
 

@@ -1,0 +1,60 @@
+"""Deletion API hardening: unknown / double / pending deletes must fail
+with clear, diagnosable errors instead of a bare dict KeyError at flush."""
+import numpy as np
+import pytest
+
+from repro.core import StreamingEngine, build_vamana
+from repro.core.index import IndexParams
+
+
+@pytest.fixture()
+def engine():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(120, 12)).astype(np.float32)
+    idx = build_vamana(vecs, params=IndexParams(dim=12, R=6, R_relaxed=7),
+                       L_build=16, max_c=24, seed=0)
+    return StreamingEngine(idx, engine="greator", batch_size=10**9)
+
+
+def test_delete_nonexistent_raises(engine):
+    with pytest.raises(KeyError, match="unknown vertex id"):
+        engine.delete(10_000)
+    assert not engine.pending_deletes    # nothing staged
+
+
+def test_double_delete_same_batch_raises(engine):
+    engine.delete(5)
+    with pytest.raises(KeyError, match="double delete"):
+        engine.delete(5)
+    assert engine.pending_deletes == [5]
+
+
+def test_delete_after_flushed_delete_raises(engine):
+    engine.delete(7)
+    engine.flush()
+    with pytest.raises(KeyError, match="unknown vertex id"):
+        engine.delete(7)
+
+
+def test_delete_of_pending_insert_raises(engine):
+    vid = engine.insert(np.zeros(12, np.float32))
+    with pytest.raises(KeyError, match="pending insert"):
+        engine.delete(vid)
+    # after flush the vertex is live and deletable
+    engine.flush()
+    engine.delete(vid)
+    engine.flush()
+    assert engine.index.slot_of(vid) == -1
+
+
+def test_release_slot_message_names_the_vertex(engine):
+    with pytest.raises(KeyError, match="release_slot\\(424242\\)"):
+        engine.index.release_slot(424242)
+
+
+def test_valid_delete_still_works(engine):
+    engine.delete(3)
+    stats = engine.flush()
+    assert stats.n_deletes == 1
+    assert engine.index.slot_of(3) == -1
+    engine.index.check_invariants()

@@ -1,0 +1,125 @@
+"""DeviceIndexView: localized delta uploads must keep the device mirror
+exactly equal to the host arrays with zero full-array transfers in steady
+state, and the in-kernel alive filter must never surface deleted ids."""
+import numpy as np
+import pytest
+
+from repro.core import StreamingEngine, brute_force_knn, build_vamana
+from repro.core.index import GraphIndex, IndexParams
+
+N, DIM = 500, 24
+
+
+@pytest.fixture()
+def small_index():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(N, DIM)).astype(np.float32)
+    params = IndexParams(dim=DIM, R=8, R_relaxed=9)
+    idx = build_vamana(vecs, params=params, L_build=24, max_c=32, seed=0)
+    return vecs, idx
+
+
+def _assert_mirror_equals_host(idx: GraphIndex):
+    dv, dn, da = idx.device_arrays()
+    np.testing.assert_allclose(np.asarray(dv), idx.vectors)
+    np.testing.assert_array_equal(np.asarray(dn), idx.neighbors)
+    np.testing.assert_array_equal(np.asarray(da), idx.alive)
+
+
+def test_scatter_equivalence_random_mutation_sequence(small_index):
+    """Random insert/delete/patch sequence: the scatter-updated mirror must
+    equal the host arrays bit-for-bit, with no new full uploads."""
+    _, idx = small_index
+    idx.device_arrays()                      # materialize the mirror
+    full0 = idx.device_view.counters.full_uploads
+    rng = np.random.default_rng(1)
+    next_id = max(idx._local_map) + 1
+    for _ in range(60):
+        op = rng.integers(3)
+        if op == 0 and len(idx._local_map) > 10:          # delete
+            vid = int(rng.choice(list(idx._local_map)))
+            idx.release_slot(vid)
+        elif op == 1:                                      # insert
+            slot = idx.allocate_slot(next_id)
+            next_id += 1
+            nbrs = rng.choice(N, size=5, replace=False)
+            idx.write_vertex(
+                slot, rng.normal(size=DIM).astype(np.float32),
+                nbrs[nbrs != slot])
+        else:                                              # neighbor patch
+            live = np.flatnonzero(idx.alive)
+            slot = int(rng.choice(live))
+            nbrs = rng.choice(N, size=6, replace=False)
+            idx.set_neighbors(slot, nbrs[nbrs != slot])
+        if rng.integers(4) == 0:    # interleave device syncs mid-sequence
+            _assert_mirror_equals_host(idx)
+    _assert_mirror_equals_host(idx)
+    c = idx.device_view.counters
+    assert c.full_uploads == full0, "mutations triggered a full re-upload"
+    assert c.scatter_uploads > 0 and c.scatter_rows > 0
+
+
+def test_steady_state_updates_scatter_only(small_index):
+    """Engine update batches must never re-upload the full arrays: the
+    full-upload counter stays at its post-build value."""
+    vecs, idx = small_index
+    eng = StreamingEngine(idx, engine="greator", batch_size=10**9)
+    eng.search(vecs[:4], k=5, L=32)          # materialize
+    full0 = idx.device_view.counters.full_uploads
+    rng = np.random.default_rng(2)
+    for batch in range(3):
+        for vid in rng.choice(
+                np.fromiter(idx._local_map, np.int64), 8, replace=False):
+            eng.delete(int(vid))
+        for _ in range(8):
+            eng.insert(rng.normal(size=DIM).astype(np.float32))
+        eng.flush()
+        eng.search(vecs[:4], k=5, L=32)
+    c = idx.device_view.counters
+    assert c.full_uploads == full0, (
+        f"{c.full_uploads - full0} full uploads during steady-state batches")
+    assert c.scatter_uploads > 0
+    # localized traffic: scatters moved far fewer bytes than re-uploads would
+    assert c.scatter_bytes < 3 * c.full_bytes
+
+
+def test_alive_filter_excludes_deleted_in_kernel(small_index):
+    """Deleted ids must never appear in results, and alive-filtered recall
+    must match brute force over the survivors."""
+    vecs, idx = small_index
+    eng = StreamingEngine(idx, engine="greator", batch_size=10**9)
+    rng = np.random.default_rng(3)
+    deleted = set(int(v) for v in rng.choice(N, 60, replace=False))
+    for vid in deleted:
+        eng.delete(vid)
+    eng.flush()
+    queries = vecs[rng.choice(N, 30, replace=False)] \
+        + 0.01 * rng.normal(size=(30, DIM)).astype(np.float32)
+    got = eng.search(queries, k=10, L=60)
+    assert not np.isin(got, list(deleted)).any(), \
+        "kernel returned deleted ids"
+    live_ids = np.array(sorted(set(range(N)) - deleted))
+    gt = live_ids[brute_force_knn(vecs[live_ids], queries, 10)]
+    recall = np.mean([len(set(got[i]) & set(gt[i])) / 10
+                      for i in range(len(queries))])
+    assert recall >= 0.8, f"alive-filtered recall collapsed: {recall}"
+
+
+def test_grow_falls_back_to_full_upload():
+    """Capacity growth changes array shapes: the view must do one fresh
+    full upload and then return to scatter-only operation."""
+    rng = np.random.default_rng(4)
+    vecs = rng.normal(size=(40, 8)).astype(np.float32)
+    params = IndexParams(dim=8, R=4, R_relaxed=5)
+    idx = build_vamana(vecs, params=params, L_build=12, max_c=16, seed=0)
+    idx.device_arrays()
+    full0 = idx.device_view.counters.full_uploads
+    nid = 1000
+    cap0 = idx.capacity
+    while idx.capacity == cap0:
+        slot = idx.allocate_slot(nid)
+        idx.write_vertex(slot, rng.normal(size=8).astype(np.float32),
+                         np.array([0, 1], np.int32))
+        nid += 1
+    _assert_mirror_equals_host(idx)
+    assert idx.device_view.counters.full_uploads == full0 + 1

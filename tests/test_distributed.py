@@ -87,10 +87,11 @@ for s in range(n_shards):
 entries = jnp.asarray([0] * n_shards, jnp.int32)
 search = make_distributed_search(mesh, L=32, W=4, k=5)
 qs = jnp.asarray(vecs[[10, 300, 700, 900]])
+alive = jnp.ones((n_shards * nl,), bool)  # sharded alive-mask operand
 with jax.set_mesh(mesh):
     ids, dists = jax.jit(search)(
         jnp.asarray(vecs.reshape(n_shards, nl, d).reshape(-1, d)),
-        jnp.asarray(nbrs), entries, qs)
+        jnp.asarray(nbrs), alive, entries, qs)
 ids = np.asarray(ids)
 # global id encoding: local_slot * n_shards + shard;
 # row-sharded layout: global row r lives on shard r // nl with slot r % nl
@@ -103,6 +104,7 @@ print("DIST_SEARCH_OK")
 """
 
 
+@pytest.mark.slow  # subprocess + 8 host devices
 def test_device_level_fanout_search():
     r = subprocess.run([sys.executable, "-c", DEVICE_SEARCH_SCRIPT],
                        capture_output=True, text=True, env=ENV,
@@ -144,6 +146,7 @@ print("EP_MOE_OK")
 """
 
 
+@pytest.mark.slow  # subprocess + 8 host devices
 def test_ep_moe_matches_dense():
     r = subprocess.run([sys.executable, "-c", EP_MOE_SCRIPT],
                        capture_output=True, text=True, env=ENV,
@@ -191,6 +194,7 @@ print("VOCAB_CE_OK")
 """
 
 
+@pytest.mark.slow  # subprocess + 8 host devices
 def test_vocab_parallel_matches_dense():
     r = subprocess.run([sys.executable, "-c", VOCAB_CE_SCRIPT],
                        capture_output=True, text=True, env=ENV,
@@ -235,6 +239,7 @@ print("Q8_GATHER_OK")
 """
 
 
+@pytest.mark.slow  # subprocess + 8 host devices
 def test_q8_fsdp_gather_numerics():
     r = subprocess.run([sys.executable, "-c", Q8_GATHER_SCRIPT],
                        capture_output=True, text=True, env=ENV,

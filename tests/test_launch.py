@@ -11,6 +11,8 @@ from repro.configs.base import LM_SHAPES, shapes_for
 from repro.launch import hlo_parse
 from repro.launch.flops import cell_cost
 
+pytestmark = pytest.mark.slow  # subprocess dry-runs: excluded from the fast tier
+
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
 
 SAMPLE_HLO = """\

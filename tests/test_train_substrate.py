@@ -21,6 +21,8 @@ from repro.train.checkpoint import (latest_checkpoint, restore_checkpoint,
                                     save_checkpoint)
 from repro.train.straggler import DeadlineAccumulator
 
+pytestmark = pytest.mark.slow  # model-stack compiles: excluded from the fast tier
+
 
 def _quadratic_setup(opt_name):
     tcfg = TrainConfig(lr=0.05, warmup_steps=0, total_steps=200,
