@@ -13,7 +13,7 @@ import numpy as np
 from repro.kernels import ref
 from repro.kernels.pairwise_dist import pairwise_dist
 
-from .common import emit
+from .common import BENCH_SMOKE, emit
 
 
 def _time(fn, *args, iters=20):
@@ -26,7 +26,8 @@ def _time(fn, *args, iters=20):
 
 
 def kernel_pairwise() -> None:
-    for m, n, d in [(128, 1024, 128), (256, 4096, 128), (64, 2048, 960)]:
+    shapes = [(128, 1024, 128), (256, 4096, 128), (64, 2048, 960)]
+    for m, n, d in (shapes[:1] if BENCH_SMOKE else shapes):
         x = jax.random.normal(jax.random.PRNGKey(0), (m, d))
         y = jax.random.normal(jax.random.PRNGKey(1), (n, d))
         f = jax.jit(ref.pairwise_sq_l2)
@@ -41,7 +42,8 @@ def kernel_pairwise() -> None:
 
 
 def kernel_gather() -> None:
-    for b, k, n, d in [(16, 64, 20_000, 128), (4, 128, 20_000, 960)]:
+    shapes = [(16, 64, 20_000, 128), (4, 128, 20_000, 960)]
+    for b, k, n, d in (shapes[:1] if BENCH_SMOKE else shapes):
         q = jax.random.normal(jax.random.PRNGKey(0), (b, d))
         v = jax.random.normal(jax.random.PRNGKey(1), (n, d))
         idx = jax.random.randint(jax.random.PRNGKey(2), (b, k), 0, n,
@@ -55,7 +57,7 @@ def kernel_gather() -> None:
 def beam_search_micro() -> None:
     from repro.core.search import batch_beam_search
     rng = np.random.default_rng(0)
-    n, d, deg = 20_000, 128, 24
+    n, d, deg = (4_000 if BENCH_SMOKE else 20_000), 128, 24
     vecs = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
     nbrs = jnp.asarray(rng.integers(0, n, size=(n, deg)).astype(np.int32))
     qs = jnp.asarray(rng.normal(size=(32, d)).astype(np.float32))
@@ -79,13 +81,14 @@ def pq_tradeoff() -> None:
     vectors FreshDiskANN-family systems use for update-phase distances."""
     from repro.core import ProductQuantizer, brute_force_knn
     from repro.data import synthetic_vectors
-    vecs = synthetic_vectors(4000, 128, n_clusters=32, seed=5)
-    for m in (8, 16, 32):
+    vecs = synthetic_vectors(1500 if BENCH_SMOKE else 4000, 128,
+                             n_clusters=32, seed=5)
+    for m in ((8,) if BENCH_SMOKE else (8, 16, 32)):
         pq = ProductQuantizer.fit(vecs, m=m, k=128, iters=10)
         codes = pq.encode(vecs)
         rng = np.random.default_rng(0)
         hits = []
-        for qi in rng.choice(4000, 20, replace=False):
+        for qi in rng.choice(len(vecs), 20, replace=False):
             q = vecs[qi] + 0.01 * rng.normal(size=128).astype(np.float32)
             exact = set(brute_force_knn(vecs, q[None], 10)[0].tolist())
             approx = set(np.argsort(pq.adc(q, codes))[:10].tolist())

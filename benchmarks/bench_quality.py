@@ -75,7 +75,8 @@ def fig13_batch_size_sweep() -> None:
     ds = BENCH_DATASETS[0]
     info = build_base_once(ds)
     vecs = info["vectors"]
-    for frac in (0.001, 0.004, 0.016):
+    from .common import BENCH_SMOKE
+    for frac in ((0.004,) if BENCH_SMOKE else (0.001, 0.004, 0.016)):
         res = run_all_systems(ds, batch_frac=frac, n_batches=3)
         for system in SYSTEMS:
             st = res[system]["stats"]

@@ -1,0 +1,170 @@
+"""Streaming front-end benchmark: workload throughput, p50/p99 search
+latency, freshness-recall (recall *including* staged inserts/deletes), and
+the batched-front-end vs per-query-synchronous search comparison.
+
+    PYTHONPATH=src python -m benchmarks.bench_stream [--smoke] [--n N]
+
+Also runs under ``benchmarks.run`` as the ``stream`` suite.  Freshness
+recall is the paper's recall@k extended to staged state: a pending insert
+missing from the results, or a pending delete still present, costs recall —
+the number a flush-only engine (no fresh tier) cannot reach 1.0 on.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import IOSimulator, StreamingEngine, build_vamana
+from repro.core.index import IndexParams
+from repro.data import synthetic_vectors
+from repro.stream import (WORKLOADS, EpochScheduler, freshness_recall,
+                          run_events)
+
+from .common import BENCH_SMOKE, emit
+
+_BASE_CACHE: dict = {}
+
+
+def _base(n: int, dim: int, seed: int = 0):
+    key = (n, dim, seed)
+    if key not in _BASE_CACHE:
+        vecs = synthetic_vectors(n + n // 2, dim, seed=seed)
+        params = IndexParams(dim=dim, R=12, R_relaxed=13)
+        idx = build_vamana(vecs[:n], params=params, L_build=32, max_c=48,
+                           seed=seed)
+        _BASE_CACHE[key] = (vecs, idx)
+    return _BASE_CACHE[key]
+
+
+def _frontend(n: int, dim: int, *, max_batch=16, deadline_s=1e-3, L=64):
+    vecs, idx = _base(n, dim)
+    eng = StreamingEngine(idx.clone(io=IOSimulator()), engine="greator",
+                          batch_size=10**9)
+    return vecs, EpochScheduler(eng, max_batch=max_batch,
+                                deadline_s=deadline_s, L=L)
+
+
+def run_stream_bench(*, smoke: bool = True, n: int | None = None,
+                     dim: int | None = None, seed: int = 0) -> dict:
+    """Run every workload + the front-end comparison; returns the report
+    dict (also used by tests/test_stream.py to pin the acceptance
+    criteria).  Scale knobs: smoke => tiny N, a few dozen events."""
+    n = n or (400 if smoke else 4000)
+    dim = dim or (32 if smoke else 128)
+    scale = 0.5 if smoke else 2.0
+    report: dict = {"n": n, "dim": dim, "workloads": {}}
+
+    for name, gen in WORKLOADS.items():
+        vecs, sched = _frontend(n, dim)
+        events = list(gen(vecs, n, seed=seed, scale=scale))
+        # correctness pass on an identical event stream: collects the
+        # brute-force freshness ground truth AND warms the jit shape
+        # buckets, so the timed pass below measures steady-state serving
+        # with no GT overhead inside the timed region
+        wvecs, wsched = _frontend(n, dim)
+        wtickets, wgts = run_events(
+            wsched, list(gen(wvecs, n, seed=seed, scale=scale)),
+            collect_gt=True)
+        t0 = time.perf_counter()
+        tickets, _ = run_events(sched, events)
+        wall = time.perf_counter() - t0
+        st = sched.batcher.stats
+        n_upd = sum(1 for e in events if e.op in ("insert", "delete"))
+        rep = {
+            "events": len(events),
+            "searches": len(tickets),
+            "updates": n_upd,
+            "search_qps": len(tickets) / max(wall, 1e-9),
+            "p50_ms": st.percentile(50) * 1e3,
+            "p99_ms": st.percentile(99) * 1e3,
+            "freshness_recall": freshness_recall(wtickets, wgts),
+            "epochs": sched.epoch,
+            "mean_batch": float(np.mean(st.batch_sizes))
+            if st.batch_sizes else 0.0,
+        }
+        report["workloads"][name] = rep
+    report["front_end"] = _front_end_compare(n, dim, seed=seed,
+                                             smoke=smoke)
+    return report
+
+
+def _front_end_compare(n: int, dim: int, *, seed: int, smoke: bool,
+                       fanout: int = 8) -> dict:
+    """Batched front-end vs per-query synchronous search on a >=8-way
+    concurrent workload: `fanout` requests arrive together; the batcher
+    runs them as one device batch, the sync path dispatches one by one."""
+    n_waves = 6 if smoke else 24
+    vecs, sched = _frontend(n, dim, max_batch=fanout)
+    eng = sched.engine
+    rng = np.random.default_rng(seed + 17)
+    queries = (vecs[rng.integers(0, n, size=n_waves * fanout)]
+               + 0.01 * rng.normal(size=(n_waves * fanout, dim))
+               ).astype(np.float32)
+    k = 10
+    # warm both dispatch shapes (B=1 sync, B=fanout batched)
+    eng.search(queries[:1], k=k, L=64)
+    sched.search(queries[:fanout], k=k)
+
+    t0 = time.perf_counter()
+    for q in queries:
+        eng.search(q[None], k=k, L=64)
+    sync_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for w in range(n_waves):
+        for q in queries[w * fanout:(w + 1) * fanout]:
+            sched.submit_search(q, k)       # fanout-th submit flushes
+    sched.drain()
+    batched_s = time.perf_counter() - t0
+
+    nq = len(queries)
+    return {
+        "fanout": fanout,
+        "queries": nq,
+        "sync_qps": nq / max(sync_s, 1e-9),
+        "batched_qps": nq / max(batched_s, 1e-9),
+        "speedup": sync_s / max(batched_s, 1e-9),
+    }
+
+
+def bench_stream_frontend() -> None:
+    rep = run_stream_bench(smoke=BENCH_SMOKE)
+    for name, r in rep["workloads"].items():
+        emit(f"stream/{name}", r["p50_ms"] * 1e3,
+             f"qps={r['search_qps']:.1f} p99={r['p99_ms']:.2f}ms "
+             f"freshness_recall={r['freshness_recall']:.3f} "
+             f"epochs={r['epochs']} mean_batch={r['mean_batch']:.1f}")
+    fe = rep["front_end"]
+    emit("stream/front_end_vs_sync", 0.0,
+         f"sync={fe['sync_qps']:.1f}qps batched={fe['batched_qps']:.1f}qps "
+         f"speedup={fe['speedup']:.2f}x fanout={fe['fanout']}")
+
+
+ALL = [bench_stream_frontend]
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny N, seconds not minutes")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--dim", type=int, default=None)
+    args = ap.parse_args()
+    rep = run_stream_bench(smoke=args.smoke, n=args.n, dim=args.dim)
+    print(f"# stream front-end bench  n={rep['n']} dim={rep['dim']}")
+    print(f"{'workload':<18s} {'searches':>8s} {'qps':>8s} {'p50ms':>7s} "
+          f"{'p99ms':>7s} {'fresh@k':>8s} {'epochs':>6s}")
+    for name, r in rep["workloads"].items():
+        print(f"{name:<18s} {r['searches']:8d} {r['search_qps']:8.1f} "
+              f"{r['p50_ms']:7.2f} {r['p99_ms']:7.2f} "
+              f"{r['freshness_recall']:8.3f} {r['epochs']:6d}")
+    fe = rep["front_end"]
+    print(f"front-end ({fe['fanout']}-way): sync {fe['sync_qps']:.1f} qps "
+          f"vs batched {fe['batched_qps']:.1f} qps "
+          f"({fe['speedup']:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,9 @@ from .common import (BENCH_DATASETS, SYSTEMS, build_base_once, emit,
 _RESULTS_CACHE: dict = {}
 
 
-def run_all_systems(dataset: str, *, batch_frac=0.001, n_batches=5):
+def run_all_systems(dataset: str, *, batch_frac=0.001, n_batches=None):
+    from .common import N_BATCHES
+    n_batches = N_BATCHES if n_batches is None else n_batches
     key = (dataset, batch_frac, n_batches)
     if key in _RESULTS_CACHE:
         return _RESULTS_CACHE[key]

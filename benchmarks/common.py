@@ -23,9 +23,16 @@ from repro.core.index import IndexParams
 from repro.core.update import EngineConfig
 from repro.data import DATASET_DIMS, streaming_workload, synthetic_vectors
 
-BENCH_N = int(os.environ.get("BENCH_N", 12_000))
-BENCH_DATASETS = os.environ.get("BENCH_DATASETS",
-                                "sift1m,deep,gist").split(",")
+# --smoke (benchmarks.run) / BENCH_SMOKE=1: tiny-N CI mode — every suite
+# still exercises its full code path, but at a scale that finishes in
+# seconds-to-a-minute so the benchmarks can't bit-rot unnoticed
+# (tests/test_stream.py runs it as a slow-marked subprocess test).
+BENCH_SMOKE = os.environ.get("BENCH_SMOKE", "0") == "1"
+BENCH_N = int(os.environ.get("BENCH_N", 800 if BENCH_SMOKE else 12_000))
+BENCH_DATASETS = os.environ.get(
+    "BENCH_DATASETS", "sift1m" if BENCH_SMOKE else "sift1m,deep,gist"
+).split(",")
+N_BATCHES = 2 if BENCH_SMOKE else 5
 R, R_RELAXED = 24, 25
 L_BUILD, MAX_C = 48, 80
 SYSTEMS = ("freshdiskann", "ipdiskann", "greator")
@@ -52,7 +59,8 @@ def fresh_engine(dataset: str, system: str, *, batch_size=10**9,
                            batch_size=batch_size)
 
 
-def workload(dataset: str, *, batch_frac=0.001, n_batches=5, seed=1):
+def workload(dataset: str, *, batch_frac=0.001, n_batches=None, seed=1):
+    n_batches = N_BATCHES if n_batches is None else n_batches
     info = build_base_once(dataset)
     vecs = info["vectors"]
     n = len(info["base"])

@@ -2,20 +2,31 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Scale via env:
 BENCH_N (vectors per dataset, default 12000), BENCH_DATASETS.
+
+``--smoke`` (or BENCH_SMOKE=1) runs every suite at tiny scale — seconds,
+not minutes — so CI can prove the benchmarks still execute end-to-end
+(tests/test_stream.py has a slow-marked test doing exactly that).
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
 
 def main() -> None:
-    from . import bench_kernels, bench_quality, bench_update
+    argv = [a for a in sys.argv[1:] if a != "--smoke"]
+    if len(argv) != len(sys.argv) - 1:
+        # must land in the environment before benchmarks.common is imported
+        os.environ["BENCH_SMOKE"] = "1"
+
+    from . import bench_kernels, bench_quality, bench_stream, bench_update
 
     suites = [("kernels", bench_kernels.ALL),
               ("update", bench_update.ALL),
-              ("quality", bench_quality.ALL)]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+              ("quality", bench_quality.ALL),
+              ("stream", bench_stream.ALL)]
+    only = argv[0] if argv else None
     print("name,us_per_call,derived")
     t0 = time.time()
     for sname, fns in suites:

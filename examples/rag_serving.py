@@ -15,14 +15,18 @@ from repro.core import build_engine
 from repro.data import synthetic_vectors
 from repro.models import get_model
 from repro.serve import ServeEngine
+from repro.stream import EpochScheduler
 
 
 def main() -> None:
     print("== RAG serving with an online-updated Greator index ==")
     dim = 64
     docs = synthetic_vectors(2000, dim, n_clusters=16, seed=0)
-    retriever = build_engine(docs, engine="greator", R=16, L_build=40,
-                             max_c=64, batch_size=10**9)
+    engine = build_engine(docs, engine="greator", R=16, L_build=40,
+                          max_c=64, batch_size=10**9)
+    # stream front-end: retrievals go through the query micro-batcher and
+    # epoch snapshots; staged doc inserts are retrievable pre-flush
+    retriever = EpochScheduler(engine, max_batch=8, L=96)
 
     cfg = get_config("qwen3_1_7b").reduced()
     api = get_model(cfg)
@@ -33,8 +37,9 @@ def main() -> None:
     rng = np.random.default_rng(0)
     t0 = time.time()
     for wave in range(3):
-        rids = [eng.submit(list(rng.integers(2, 400, size=6)), max_tokens=8)
-                for _ in range(6)]
+        prompts = [list(rng.integers(2, 400, size=6)) for _ in range(6)]
+        # wave submit: the 6 retrievals share front-end micro-batches
+        rids = eng.submit_wave(prompts, max_tokens=8)
         done = eng.run_until_done()
         print(f"wave {wave}: served {len(done)} requests "
               f"({(time.time() - t0):5.1f}s)  "
@@ -45,15 +50,20 @@ def main() -> None:
                 docs[rng.integers(0, 2000)]
                 + 0.05 * rng.normal(size=dim).astype(np.float32))
         for vid in rng.choice(1500, 5, replace=False):
-            if retriever.index.slot_of(int(vid)) >= 0:
+            try:
                 retriever.delete(int(vid))
-        st = retriever.flush()
+            except KeyError:      # already deleted in an earlier wave
+                pass
+        st = retriever.flush_updates()   # epoch e -> e+1
         if st:
             print(f"  index updated: +10/-5 vectors at "
                   f"{st.throughput:.0f} updates/s, "
-                  f"read {st.io.read_bytes / 1e3:.0f} KB")
-    retriever.index.check_invariants()
-    print("served all waves against a live-updating index")
+                  f"read {st.io.read_bytes / 1e3:.0f} KB, "
+                  f"epoch {retriever.epoch}")
+    engine.index.check_invariants()
+    bs = retriever.batcher.stats
+    print(f"served all waves against a live-updating index "
+          f"({bs.n_requests} retrievals in {bs.n_batches} micro-batches)")
 
 
 if __name__ == "__main__":

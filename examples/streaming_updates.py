@@ -1,7 +1,9 @@
 """End-to-end driver for the paper's workload (Sec. 7.2): build on 99% of
 the data, stream consecutive 0.1% delete+insert batches through all three
 systems, and print the paper's headline comparisons (throughput, I/O,
-prune rates, recall) — Figs. 8-11 in miniature.
+prune rates, recall) — Figs. 8-11 in miniature — followed by a stream
+front-end demo (fresh-tier read-your-writes + micro-batched searches over
+epoch snapshots).
 
     PYTHONPATH=src python examples/streaming_updates.py [--n 8000]
 """
@@ -13,6 +15,7 @@ from repro.core import (IOSimulator, StreamingEngine, brute_force_knn,
                         build_vamana)
 from repro.core.index import IndexParams
 from repro.data import streaming_workload, synthetic_vectors
+from repro.stream import EpochScheduler
 
 
 def main() -> None:
@@ -89,6 +92,35 @@ def main() -> None:
            / sum(s.total_s for s in f))
     print(f"\nGreator vs FreshDiskANN update throughput: {thr:.2f}x "
           f"(paper: 2.47x-6.45x)")
+
+    # ---- stream front-end: freshness + micro-batched serving -------------
+    print("\n== stream front-end (fresh tier + epoch snapshots) ==")
+    eng, _, live = results["greator"]
+    sched = EpochScheduler(eng, max_batch=8, L=96)
+    rng = np.random.default_rng(11)
+    fresh_vec = (vecs[rng.integers(args.n)]
+                 + 0.3 * rng.normal(size=args.dim)).astype(np.float32)
+    fresh_id = sched.insert(fresh_vec)          # staged, not flushed
+    t = sched.submit_search(fresh_vec, 5)
+    sched.drain()
+    print(f"staged insert {fresh_id} searchable pre-flush: "
+          f"{fresh_id == int(t.result[0])} (epoch {t.epoch_executed})")
+    victim = int(next(iter(live)))
+    sched.delete(victim)
+    got = sched.search(vecs[victim][None], k=10)[0]
+    print(f"staged delete {victim} invisible pre-flush: "
+          f"{victim not in got}")
+    sched.flush_updates()                        # epoch e -> e+1
+    ids = np.fromiter(live, np.int64)
+    qs = (vecs[rng.choice(ids, 24)] + 0.01 * rng.normal(
+        size=(24, args.dim))).astype(np.float32)
+    for q in qs:
+        sched.submit_search(q, 10)
+    sched.drain()
+    st = sched.batcher.stats
+    print(f"micro-batched {st.n_requests} searches in {st.n_batches} "
+          f"batches; p50 {st.percentile(50)*1e3:.2f}ms "
+          f"p99 {st.percentile(99)*1e3:.2f}ms; epoch {sched.epoch}")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ Public API:
 """
 from .build import brute_force_knn, build_vamana, find_medoid
 from .device_view import DeviceIndexView, ViewCounters
-from .engine import StreamingEngine, build_engine
+from .engine import EngineSnapshot, StreamingEngine, build_engine
 from .index import GraphIndex, IndexParams
 from .pq import ProductQuantizer
 from .prune import batched_robust_prune, robust_prune
@@ -19,7 +19,7 @@ from .update import ENGINES, BatchStats, EngineConfig
 
 __all__ = [
     "brute_force_knn", "build_vamana", "build_engine", "find_medoid",
-    "DeviceIndexView", "ViewCounters",
+    "DeviceIndexView", "ViewCounters", "EngineSnapshot",
     "StreamingEngine", "GraphIndex", "IndexParams", "batched_robust_prune",
     "ProductQuantizer", "robust_prune", "batch_beam_search", "beam_search", "IOCostModel",
     "IOCounters", "IOSimulator", "PAGE_SIZE", "ENGINES", "BatchStats",

@@ -12,12 +12,17 @@ insert/delete/search API with:
   reloads it.  This is the ANN-side analogue of the trainer's
   checkpoint/restart path and is exercised by tests/test_failure_recovery.py;
 * **search** — jitted batched beam search with alive-filtering of results
-  (deleted vertices may be routed through but never returned).
+  (deleted vertices may be routed through but never returned), read-your-
+  writes over *staged* updates (pending inserts are served from a searchable
+  fresh tier, pending deletes are tombstoned out of the alive operand), and
+  an `EngineSnapshot` hook so the stream front-end (repro.stream) can pin a
+  consistent epoch across a query micro-batch.
 
 Page-level concurrency control from the paper degenerates to phase barriers
 in this single-process host: within a batch the phases are serial, and
 searches interleave only between batches — the same consistency the paper's
-page locks provide, without simulated lock traffic.  Noted in DESIGN.md.
+page locks provide, without simulated lock traffic.  Noted in DESIGN.md
+("Consistency & freshness model").
 """
 from __future__ import annotations
 
@@ -26,6 +31,7 @@ import os
 import time
 from dataclasses import dataclass, field
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -33,7 +39,7 @@ from .build import build_vamana
 from .index import GraphIndex, IndexParams
 from .search import batch_beam_search
 from .storage import IOSimulator
-from .update import ENGINES, BatchStats, EngineConfig
+from .update import ENGINES, BatchStats, EngineConfig, _bucket_size
 
 
 @dataclass
@@ -46,10 +52,37 @@ class SearchStats:
         return float(np.percentile(np.array(self.latencies_s), p))
 
 
+@jax.jit
+def _tombstone_alive(alive, slots):
+    # NOT donated: `alive` is the DeviceIndexView's mirror; the tombstoned
+    # copy is ephemeral per snapshot while the mirror lives on.
+    return alive.at[slots].set(False)
+
+
+@dataclass
+class EngineSnapshot:
+    """One consistent, device-resident view of the searchable state.
+
+    Captures the main-index mirrors (alive already tombstoned with pending
+    deletes), the entry slot, a host copy of the slot->id map, and the fresh
+    tier's buffer.  Valid until the next `flush()` mutates the index (the
+    device mirrors are donated to the next delta scatter); the stream
+    scheduler enforces that window by draining in-flight micro-batches
+    before every flush and re-snapshotting after.
+    """
+    vectors: jnp.ndarray
+    neighbors: jnp.ndarray
+    alive: jnp.ndarray              # tombstones applied
+    entry_slot: int
+    slot_owner: np.ndarray          # host copy, torn-state safe
+    fresh: object | None            # FreshSnapshot | None
+    n_pending_deletes: int = 0
+
+
 class StreamingEngine:
     def __init__(self, index: GraphIndex, *, engine: str = "greator",
                  cfg: EngineConfig | None = None, batch_size: int = 1000,
-                 wal_dir: str | None = None):
+                 wal_dir: str | None = None, fresh_tier: bool = True):
         self.index = index
         self.engine = ENGINES[engine](index, cfg)
         self.batch_size = batch_size
@@ -61,15 +94,54 @@ class StreamingEngine:
         self.wal_dir = wal_dir
         self._next_id = (max((int(v) for v in index._local_map), default=-1)
                          + 1)
+        # searchable overlay over pending inserts (read-your-writes);
+        # imported lazily — repro.stream depends on repro.core, not vice
+        # versa at module-import time
+        if fresh_tier:
+            from repro.stream.fresh_tier import FreshTier
+            self.fresh: FreshTier | None = FreshTier(
+                index.params.dim, index.params.metric)
+        else:
+            self.fresh = None
+        self._entry_fallback_vec: np.ndarray | None = None
+        self._staged_seq = 0          # bumps on insert/delete/flush
+        self._snap_cache: EngineSnapshot | None = None
+        self._snap_cache_key: tuple | None = None
+        self.on_flush_begin = None    # stream scheduler: quiesce searches
+        self.on_flush_end = None      # stream scheduler: advance the epoch
         if wal_dir:
             os.makedirs(wal_dir, exist_ok=True)
             self._replay_wal()
 
+    @property
+    def staged_seq(self) -> int:
+        """Monotone counter of staged-state changes (snapshot cache key)."""
+        return self._staged_seq
+
     # ------------------------------------------------------------- updates
     def insert(self, vec: np.ndarray, vid: int | None = None) -> int:
-        vid = self._next_id if vid is None else int(vid)
+        """Stage an insertion.  Explicit ids are validated eagerly (like
+        `delete`): an id that is already live, or already staged, would
+        otherwise surface twice in merged search results."""
+        if vid is None:
+            vid = self._next_id
+        else:
+            vid = int(vid)
+            if self.index.slot_of(vid) >= 0 \
+                    and vid not in self._pending_delete_set:
+                raise KeyError(
+                    f"insert({vid}): vertex id is already live in the "
+                    "index — delete it first to replace its vector")
+            if any(v == vid for v, _ in self.pending_inserts):
+                raise KeyError(
+                    f"insert({vid}): vertex id already has a pending "
+                    "insert in this batch (duplicate insert)")
         self._next_id = max(self._next_id, vid + 1)
-        self.pending_inserts.append((vid, np.asarray(vec, np.float32)))
+        vec = np.asarray(vec, np.float32)
+        self.pending_inserts.append((vid, vec))
+        if self.fresh is not None:
+            self.fresh.add(vid, vec)      # searchable before the flush
+        self._staged_seq += 1
         self._wal_append("I", vid, vec)
         self._maybe_flush()
         return vid
@@ -91,20 +163,33 @@ class StreamingEngine:
             raise KeyError(
                 f"delete({vid}): unknown vertex id (never inserted or "
                 "already deleted)")
+        if vid == self.index.entry_id:
+            # stash the entry's vector so the post-flush fallback can pick
+            # the alive vertex nearest the old entry (not an arbitrary slot)
+            self._entry_fallback_vec = \
+                self.index.vectors[self.index.slot_of(vid)].copy()
         self.pending_deletes.append(vid)
         self._pending_delete_set.add(vid)
+        self._staged_seq += 1
         self._wal_append("D", vid, None)
         self._maybe_flush()
 
     def flush(self) -> BatchStats | None:
         if not self.pending_deletes and not self.pending_inserts:
             return None
+        if self.on_flush_begin is not None:
+            self.on_flush_begin()     # quiesce: drain in-flight micro-batches
         stats = self.engine.apply_batch(self.pending_deletes,
                                         self.pending_inserts)
         self.batch_history.append(stats)
         self.pending_deletes, self.pending_inserts = [], []
         self._pending_delete_set.clear()
+        if self.fresh is not None:
+            self.fresh.clear()        # absorbed into the main index
+        self._staged_seq += 1
         self._wal_truncate()
+        if self.on_flush_end is not None:
+            self.on_flush_end()       # epoch e -> e+1
         return stats
 
     def _maybe_flush(self) -> None:
@@ -113,23 +198,111 @@ class StreamingEngine:
             self.flush()
 
     # -------------------------------------------------------------- search
-    def search(self, queries: np.ndarray, k: int = 10, L: int = 120,
-               W: int = 4) -> np.ndarray:
-        """Returns external ids, (B, k); -1 pads.  Alive-filtered in-kernel:
-        the device-resident alive mask excludes deleted vertices from the
-        result window inside beam search, so no per-query host loop runs."""
+    def _entry_slot(self) -> int:
+        """Entry slot, with a cached topology-aware fallback.
+
+        When the entry vertex has been deleted, pick the alive vertex
+        nearest the old entry's vector (stashed at delete time) — or the
+        medoid of the alive set if no stash exists (e.g. after restore).
+        The choice is written back to `entry_id`, so the O(N) scan runs
+        once per entry death, not once per search call.
+        """
+        idx = self.index
+        slot = idx.slot_of(idx.entry_id)
+        if slot >= 0:
+            return slot
+        alive = np.flatnonzero(idx.alive)
+        if len(alive) == 0:
+            raise RuntimeError("search on an index with no alive vertices")
+        vecs = idx.vectors[alive]
+        target = (self._entry_fallback_vec if self._entry_fallback_vec
+                  is not None else vecs.mean(axis=0))
+        d = ((vecs - np.asarray(target, np.float32)) ** 2).sum(axis=1)
+        slot = int(alive[int(np.argmin(d))])
+        idx.entry_id = int(idx._slot_owner[slot])     # cache the choice
+        self._entry_fallback_vec = None
+        return slot
+
+    def snapshot(self) -> EngineSnapshot:
+        """Consistent searchable view: device mirrors + tombstoned alive +
+        fresh-tier buffer.  The stream scheduler version-stamps these into
+        epochs.  Cached between staged-state changes: a read-only stretch of
+        `search()` calls reuses one snapshot (no per-call O(N) slot-owner
+        copy); any staged op bumps `staged_seq` and any index mutation
+        produces new mirror buffers via the delta scatter, either of which
+        changes the cache key."""
         idx = self.index
         dev_vecs, dev_nbrs, dev_alive = idx.device_arrays()
-        entry_slot = idx.slot_of(idx.entry_id)
-        if entry_slot < 0:  # entry was deleted: fall back to any alive slot
-            entry_slot = int(np.flatnonzero(idx.alive)[0])
-            idx.entry_id = int(idx._slot_owner[entry_slot])
+        # identity-compared key (the key tuple keeps the buffers alive, so
+        # `is` can't be fooled by id reuse after garbage collection)
+        key = (self._staged_seq, dev_vecs, dev_nbrs, dev_alive)
+        prev = self._snap_cache_key
+        if (self._snap_cache is not None and prev is not None
+                and prev[0] == key[0] and prev[1] is key[1]
+                and prev[2] is key[2] and prev[3] is key[3]):
+            return self._snap_cache
+        n_tomb = len(self.pending_deletes)
+        if n_tomb:
+            # pending deletes become invisible *now*: mask their slots out
+            # of the alive operand (beam search may still route through
+            # them, exactly like flushed deletes).  Padded to the shared
+            # shape buckets; repeating slot[0] is an idempotent re-set.
+            slots = idx.slots_of(self.pending_deletes)
+            bp = _bucket_size(n_tomb)
+            padded = np.full((bp,), slots[0], np.int32)
+            padded[:n_tomb] = slots
+            dev_alive = _tombstone_alive(dev_alive, jnp.asarray(padded))
+        fresh = self.fresh.snapshot() if self.fresh is not None else None
+        snap = EngineSnapshot(dev_vecs, dev_nbrs, dev_alive,
+                              self._entry_slot(), idx._slot_owner.copy(),
+                              fresh, n_pending_deletes=n_tomb)
+        self._snap_cache, self._snap_cache_key = snap, key
+        return snap
+
+    def search(self, queries: np.ndarray, k: int = 10, L: int = 120,
+               W: int = 4) -> np.ndarray:
+        """Returns external ids, (B, k); -1 pads.  Alive-filtered in-kernel
+        (the device-resident alive mask excludes deleted vertices from the
+        result window inside beam search) and freshness-complete: pending
+        inserts are merged in from the fresh tier, pending deletes are
+        tombstoned out — read-your-writes before any flush."""
+        ids, _ = self.search_snapshot(self.snapshot(), queries,
+                                      k=k, L=L, W=W)
+        return ids
+
+    def search_snapshot(self, snap: EngineSnapshot, queries: np.ndarray,
+                        k: int = 10, L: int = 120, W: int = 4,
+                        stats_rows: int | None = None
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """Search against a pinned snapshot; returns (ids, dists), (B, k).
+
+        `stats_rows` limits latency accounting to the first N rows — the
+        micro-batcher passes its real request count so bucket-padding lanes
+        don't pollute `search_stats` with phantom queries."""
+        idx = self.index
         t0 = time.perf_counter()
         res = batch_beam_search(
-            dev_vecs, dev_nbrs, jnp.asarray(queries, jnp.float32),
-            jnp.asarray([entry_slot], jnp.int32), dev_alive,
+            snap.vectors, snap.neighbors, jnp.asarray(queries, jnp.float32),
+            jnp.asarray([snap.entry_slot], jnp.int32), snap.alive,
             L=L, W=W, metric=idx.params.metric)
         ids = np.asarray(res.ids)
+        dists = np.asarray(res.dists)
+        B = queries.shape[0]
+        # slot -> external-id mapping (results arrive already compacted)
+        kk = min(k, ids.shape[1])
+        top, top_d = ids[:, :kk], dists[:, :kk]
+        main_ids = np.full((B, k), -1, np.int64)
+        main_d = np.full((B, k), np.inf, np.float32)
+        main_ids[:, :kk] = np.where(
+            top >= 0, snap.slot_owner[np.maximum(top, 0)], -1)
+        main_d[:, :kk] = np.where(top >= 0, top_d, np.inf)
+        if snap.fresh is not None:
+            from repro.stream.fresh_tier import fresh_topk, merge_topk
+            f_ids, f_d = fresh_topk(snap.fresh, queries, k,
+                                    metric=idx.params.metric)
+            out, out_d = merge_topk(main_ids, main_d, f_ids, f_d, k)
+        else:
+            out, out_d = main_ids, main_d
         elapsed = time.perf_counter() - t0
         # per-query latency: beam search is embarrassingly parallel across
         # queries; we record per-query compute as elapsed/B plus the modeled
@@ -137,20 +310,15 @@ class StreamingEngine:
         # simulator's convenience).  Unique-page counts are computed for the
         # whole batch at once: sort each row's page ids and count distinct
         # valid entries.
-        B = queries.shape[0]
         pages = idx.page_of(np.asarray(res.visited))   # -1 slots stay < 0
         pages.sort(axis=1)
         n_pages = ((pages[:, :1] >= 0).astype(np.int64).ravel()
                    + ((pages[:, 1:] != pages[:, :-1])
                       & (pages[:, 1:] >= 0)).sum(axis=1))
         io_t = n_pages / idx.io.cost.rand_read_iops
-        self.search_stats.latencies_s.extend((elapsed / B + io_t).tolist())
-        # slot -> external-id mapping (results arrive already compacted)
-        out = np.full((B, k), -1, np.int64)
-        top = ids[:, :k]
-        out[:, :top.shape[1]] = np.where(
-            top >= 0, idx._slot_owner[np.maximum(top, 0)], -1)
-        return out
+        lat = elapsed / B + io_t
+        self.search_stats.latencies_s.extend(lat[:stats_rows].tolist())
+        return out, out_d
 
     # ------------------------------------------------------ WAL + checkpoint
     def _wal_path(self) -> str:
@@ -178,12 +346,15 @@ class StreamingEngine:
                 rec = json.loads(line)
                 if rec["op"] == "I":
                     vid = int(rec["vid"])
-                    self.pending_inserts.append(
-                        (vid, np.asarray(rec["vec"], np.float32)))
+                    vec = np.asarray(rec["vec"], np.float32)
+                    self.pending_inserts.append((vid, vec))
+                    if self.fresh is not None:   # replayed staged inserts
+                        self.fresh.add(vid, vec)  # stay read-your-writes
                     self._next_id = max(self._next_id, vid + 1)
                 else:
                     self.pending_deletes.append(int(rec["vid"]))
                     self._pending_delete_set.add(int(rec["vid"]))
+        self._staged_seq += 1
 
     def checkpoint(self, path: str) -> None:
         os.makedirs(path, exist_ok=True)

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import StreamingEngine, brute_force_knn
+from repro.core import StreamingEngine
 from repro.core.engine import build_engine
 from repro.core.search import beam_search
 from repro.core.update import EngineConfig
@@ -80,19 +80,16 @@ class ShardedEngine:
 
     def search(self, queries: np.ndarray, k: int = 10, L: int = 64
                ) -> np.ndarray:
-        """Fan-out + merge (vectorized: one distance matrix per shard,
-        one global argsort — no per-query/per-candidate host loops)."""
-        parts = [s.search(queries, k=k, L=L) for s in self.shards]
-        q = np.asarray(queries, np.float32)
-        all_ids = np.concatenate(parts, axis=1)            # (B, S*k)
-        all_d = np.full(all_ids.shape, np.inf, np.float32)
-        for s, eng in enumerate(self.shards):
-            ids_s = parts[s]
-            slots = eng.index.slots_of(ids_s.ravel()).reshape(ids_s.shape)
-            valid = (ids_s >= 0) & (slots >= 0)
-            vecs = eng.index.vectors[np.maximum(slots, 0)]  # (B, k, d)
-            d = ((vecs - q[:, None, :]) ** 2).sum(axis=-1)
-            all_d[:, s * k:(s + 1) * k] = np.where(valid, d, np.inf)
+        """Fan-out + merge.  Each shard returns (ids, dists) from its own
+        snapshot — main index *and* fresh tier, distances included — so the
+        merge is one concatenate + global argsort.  (Recomputing distances
+        from host slots, as this used to, would drop pending inserts: their
+        ids have no main-index slot until the flush.)"""
+        parts = [s.search_snapshot(s.snapshot(), queries, k=k, L=L)
+                 for s in self.shards]
+        all_ids = np.concatenate([ids for ids, _ in parts], axis=1)
+        all_d = np.concatenate([d for _, d in parts],
+                               axis=1).astype(np.float32)   # (B, S*k)
         order = np.argsort(all_d, axis=1, kind="stable")[:, :k]
         top = np.take_along_axis(all_ids, order, axis=1)
         top_d = np.take_along_axis(all_d, order, axis=1)

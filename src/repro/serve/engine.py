@@ -8,11 +8,16 @@ jitted decode step (prompts are short in the examples; a fused prefill is
 used when available), then decode greedily until EOS/max_tokens.  Finished
 slots are recycled — continuous batching without shape recompilation.
 
-If built with a `StreamingEngine` retriever, `submit` embeds the query
-(mean-pooled one-hot projection — a stand-in embedding model), retrieves
-top-k neighbor ids from the Greator index, and prepends their associated
-context tokens to the prompt: retrieval-augmented serving where the index
-is updated *online* between requests (the paper's motivating deployment).
+If built with a retriever, `submit` embeds the query (mean-pooled one-hot
+projection — a stand-in embedding model), retrieves top-k neighbor ids from
+the Greator index, and prepends their associated context tokens to the
+prompt: retrieval-augmented serving where the index is updated *online*
+between requests (the paper's motivating deployment).  The retriever may be
+a bare `StreamingEngine` (synchronous per-call search) or a stream
+front-end (`repro.stream.EpochScheduler`), in which case retrievals go
+through its query micro-batcher and epoch snapshots; `submit_wave` submits
+several requests' retrievals together so they share one device batch
+(per-request `submit` still drains immediately — a batch of one).
 """
 from __future__ import annotations
 
@@ -60,25 +65,64 @@ class ServeEngine:
         if self.retriever is not None:
             ctx = self._retrieve_context(prompt)
             prompt = ctx + prompt
+        return self._enqueue(prompt, max_tokens)
+
+    def submit_wave(self, prompts: list[list[int]],
+                    max_tokens: int = 16) -> list[int]:
+        """Submit several requests at once.  With a stream front-end
+        retriever their retrievals are submitted together and drained once,
+        so concurrent lookups share fixed-shape micro-batches instead of
+        each dispatching a batch of one."""
+        if self.retriever is None or not self._retriever_is_frontend():
+            return [self.submit(p, max_tokens) for p in prompts]
+        retr = self.retriever
+        tickets = [retr.submit_search(self._embed(p), self.retrieve_k)
+                   for p in prompts]
+        retr.drain()
+        return [self._enqueue(self._ctx_tokens(t.result) + list(p),
+                              max_tokens)
+                for p, t in zip(prompts, tickets)]
+
+    def _enqueue(self, prompt: list[int], max_tokens: int) -> int:
         req = Request(self._next_rid, list(prompt), max_tokens)
         self._next_rid += 1
         self._queue.append(req)
         return req.rid
 
-    def _retrieve_context(self, prompt: list[int]) -> list[int]:
-        dim = self.retriever.index.params.dim
+    def _retriever_is_frontend(self) -> bool:
+        # stream front-end (EpochScheduler) wraps the StreamingEngine;
+        # detect it by its batching API, not by attribute name collisions
+        return hasattr(self.retriever, "submit_search")
+
+    def _embed(self, prompt: list[int]) -> np.ndarray:
+        retr = self.retriever
+        index = (retr.engine.index if self._retriever_is_frontend()
+                 else retr.index)
+        dim = index.params.dim
         # toy query embedding: bag-of-tokens hashed into the vector space
         v = np.zeros((dim,), np.float32)
         for t in prompt:
             rng = np.random.default_rng(t)
             v += rng.normal(size=dim).astype(np.float32)
         v /= max(len(prompt), 1)
-        ids = self.retriever.search(v[None], k=self.retrieve_k)[0]
+        return v
+
+    def _ctx_tokens(self, ids) -> list[int]:
         ctx = []
         for vid in ids:
             if vid >= 0:   # map doc id into a pseudo-token context marker
                 ctx.extend([int(vid) % self.cfg.vocab_size])
         return ctx
+
+    def _retrieve_context(self, prompt: list[int]) -> list[int]:
+        v = self._embed(prompt)
+        if self._retriever_is_frontend():    # go through the micro-batcher
+            ticket = self.retriever.submit_search(v, self.retrieve_k)
+            self.retriever.drain()
+            ids = ticket.result
+        else:
+            ids = self.retriever.search(v[None], k=self.retrieve_k)[0]
+        return self._ctx_tokens(ids)
 
     # ---------------------------------------------------------------- step
     def _admit(self) -> None:

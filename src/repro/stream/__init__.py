@@ -1,0 +1,27 @@
+"""Streaming serving front-end (FreshDiskANN-style fresh tier + DGAI-style
+query/update decoupling) — the layer between callers and the core index.
+
+    FreshTier       searchable device-resident overlay over pending inserts
+    QueryBatcher    micro-batches concurrent searches into fixed-shape calls
+    EpochScheduler  epoch-versioned snapshots; updates never tear a search
+    workload        event-stream generators (sliding-window, refresh, bursty,
+                    read-heavy RAG) + the driver that replays them
+
+See DESIGN.md "Consistency & freshness model" for the guarantees.
+"""
+from .batcher import BatcherStats, QueryBatcher, SearchTicket
+from .fresh_tier import FreshSnapshot, FreshTier, fresh_topk, merge_topk
+from .scheduler import EpochScheduler, StreamSnapshot
+from .workload import (WORKLOADS, StreamEvent, bursty_write_events,
+                       freshness_recall, rag_read_heavy_events,
+                       rolling_refresh_events, run_events,
+                       sliding_window_events)
+
+__all__ = [
+    "BatcherStats", "QueryBatcher", "SearchTicket",
+    "FreshSnapshot", "FreshTier", "fresh_topk", "merge_topk",
+    "EpochScheduler", "StreamSnapshot",
+    "WORKLOADS", "StreamEvent", "bursty_write_events", "freshness_recall",
+    "rag_read_heavy_events", "rolling_refresh_events", "run_events",
+    "sliding_window_events",
+]

@@ -1,0 +1,125 @@
+"""Query micro-batcher: accumulate concurrent search requests into
+fixed-shape device batches.
+
+The ROADMAP's serving scenario ("heavy traffic from millions of users")
+means many small independent searches, not one caller handing over a
+pre-batched matrix.  Dispatching each query alone wastes the accelerator
+(one jit dispatch + one while_loop per query); batching them amortizes the
+dispatch and lets the vmapped beam search run all lanes in one loop.
+
+`QueryBatcher` queues `SearchTicket`s and flushes a micro-batch when
+(a) `max_batch` requests are waiting, (b) the oldest request exceeds the
+flush deadline (`poll`), or (c) the caller forces a `drain`.  The batch
+dimension is padded to the `{2^k, 3*2^(k-1)}` shape buckets the update
+engines use, so XLA compiles one executable per bucket instead of one per
+batch size.  Per-request wall-clock latency (enqueue -> results assigned)
+is recorded in `BatcherStats` for the p50/p99 reports in bench_stream.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.engine import SearchStats
+from repro.core.update import _bucket_size
+
+
+@dataclass
+class SearchTicket:
+    """One in-flight search request; filled in when its batch executes."""
+    rid: int
+    query: np.ndarray               # (d,) float32
+    k: int
+    t_submit: float
+    result: np.ndarray | None = None    # (k,) external ids, -1 padded
+    dists: np.ndarray | None = None     # (k,) float32, +inf padded
+    latency_s: float | None = None
+    epoch_submitted: int = -1
+    epoch_executed: int = -1
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+@dataclass
+class BatcherStats(SearchStats):
+    """`SearchStats` (latency list + percentile) plus batching accounting."""
+    batch_sizes: list[int] = field(default_factory=list)
+    n_requests: int = 0
+    n_batches: int = 0
+    padded_lanes: int = 0           # wasted lanes from bucket padding
+
+
+class QueryBatcher:
+    """Deadline/size-triggered micro-batching over an `execute` callable.
+
+    `execute(queries, k, n_real) -> (ids, dists, epoch)` receives a
+    bucket-padded (Bp, d) float32 batch whose first `n_real` rows are real
+    requests (the rest are padding lanes) and must return (Bp, k) ids /
+    dists; `epoch` tags every ticket in the batch with the snapshot it ran
+    against (all tickets of one micro-batch see the same epoch — never a
+    torn state).
+    """
+
+    def __init__(self, execute, *, max_batch: int = 32,
+                 deadline_s: float = 2e-3):
+        assert max_batch >= 1
+        self._execute = execute
+        self.max_batch = max_batch
+        self.deadline_s = deadline_s
+        self._queue: list[SearchTicket] = []
+        self._next_rid = 0
+        self.stats = BatcherStats()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------- requests
+    def submit(self, query: np.ndarray, k: int = 10) -> SearchTicket:
+        t = SearchTicket(self._next_rid,
+                         np.asarray(query, np.float32).reshape(-1),
+                         int(k), time.perf_counter())
+        self._next_rid += 1
+        self._queue.append(t)
+        if len(self._queue) >= self.max_batch:
+            self._flush_batch()
+        return t
+
+    def poll(self, now: float | None = None) -> None:
+        """Flush any micro-batch whose oldest request passed the deadline."""
+        now = time.perf_counter() if now is None else now
+        while self._queue and now - self._queue[0].t_submit >= self.deadline_s:
+            self._flush_batch()
+
+    def drain(self) -> None:
+        """Execute everything queued (update quiesce / end of stream)."""
+        while self._queue:
+            self._flush_batch()
+
+    # ------------------------------------------------------------ execution
+    def _flush_batch(self) -> None:
+        take, self._queue = (self._queue[: self.max_batch],
+                             self._queue[self.max_batch:])
+        B = len(take)
+        Bp = _bucket_size(B)
+        kmax = max(t.k for t in take)
+        Q = np.empty((Bp, take[0].query.shape[0]), np.float32)
+        for i, t in enumerate(take):
+            Q[i] = t.query
+        Q[B:] = Q[0]                 # pad lanes repeat a real query
+        ids, dists, epoch = self._execute(Q, kmax, B)
+        t_done = time.perf_counter()
+        ids, dists = np.asarray(ids), np.asarray(dists)
+        for i, t in enumerate(take):
+            t.result = ids[i, : t.k].copy()
+            t.dists = dists[i, : t.k].copy()
+            t.epoch_executed = int(epoch)
+            t.latency_s = t_done - t.t_submit
+            self.stats.latencies_s.append(t.latency_s)
+        self.stats.batch_sizes.append(B)
+        self.stats.n_requests += B
+        self.stats.n_batches += 1
+        self.stats.padded_lanes += Bp - B

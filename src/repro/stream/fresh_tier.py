@@ -1,0 +1,164 @@
+"""Searchable fresh tier: a device-resident brute-force overlay over
+pending inserts (FreshDiskANN's in-memory fresh index, Sec. 2.2 of the
+paper's baseline discussion).
+
+Staged inserts accumulate in a small append-only buffer whose device mirror
+grows in `{2^k, 3*2^(k-1)}` padded buckets (the same compile-once shape
+scheme the update engines use).  A jitted exhaustive top-k scan over the
+buffer is exact by construction, so merging its candidates with the main
+index's beam-search window (`merge_topk`) gives read-your-writes semantics:
+a vector inserted one call ago is returned by the very next search, before
+any batch flush touches the graph.
+
+The buffer is tiny — at most one update batch (`StreamingEngine.batch_size`)
+of vectors — so the brute-force scan is one small matmul per micro-batch,
+and append sync uploads only the new rows (no donation: epoch snapshots may
+still hold the previous device buffer, see scheduler.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.update import _bucket_size
+from repro.kernels import ref
+
+_MIN_CAPACITY = 64
+
+
+@jax.jit
+def _append_rows(arr, slots, rows):
+    # NOT donated (unlike device_view's scatter): snapshots taken by the
+    # epoch scheduler keep references to earlier fresh buffers, and the
+    # buffer is small enough that the copy is free in practice.
+    return arr.at[slots].set(rows)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _scan_topk(queries, fvecs, count, *, k: int, metric: str):
+    """Exhaustive top-k over the fresh buffer.
+
+    queries (B, d), fvecs (C, d) with C a padded bucket, count () int32 —
+    rows >= count are masked to +inf.  Returns (positions, dists), both
+    (B, k); invalid lanes carry +inf distance.
+    """
+    if metric == "sq_l2":
+        d = ref.pairwise_sq_l2(queries, fvecs)
+    else:
+        d = ref.pairwise_ip(queries, fvecs)
+    valid = jnp.arange(fvecs.shape[0]) < count
+    d = jnp.where(valid[None, :], d, jnp.inf)
+    neg, pos = jax.lax.top_k(-d, k)
+    return pos.astype(jnp.int32), -neg
+
+
+@dataclass
+class FreshSnapshot:
+    """Immutable view of the fresh tier at one instant.
+
+    `vecs` is the device buffer (valid forever — appends build new buffers
+    instead of donating), `ids` a host copy of the external ids, `count`
+    the number of live rows at snapshot time.
+    """
+    vecs: jnp.ndarray          # (C, d) device, C = padded bucket
+    ids: np.ndarray            # (count,) int64
+    count: int
+
+
+class FreshTier:
+    """Append-only staging buffer with a device mirror and exact search."""
+
+    def __init__(self, dim: int, metric: str = "sq_l2"):
+        self.dim = dim
+        self.metric = metric
+        self._host = np.zeros((0, dim), np.float32)
+        self._ids = np.zeros((0,), np.int64)
+        self.count = 0
+        self._dev = None
+        self._synced = 0            # host rows already on device
+
+    def __len__(self) -> int:
+        return self.count
+
+    # ------------------------------------------------------------- mutation
+    def add(self, vid: int, vec: np.ndarray) -> None:
+        if self.count == len(self._host):
+            cap = _bucket_size(max(self.count + 1, _MIN_CAPACITY))
+            host = np.zeros((cap, self.dim), np.float32)
+            host[: self.count] = self._host[: self.count]
+            ids = np.full((cap,), -1, np.int64)
+            ids[: self.count] = self._ids[: self.count]
+            self._host, self._ids = host, ids
+            self._dev = None        # shape change: full (small) re-upload
+        self._host[self.count] = np.asarray(vec, np.float32)
+        self._ids[self.count] = int(vid)
+        self.count += 1
+
+    def clear(self) -> None:
+        """Batch flush absorbed the staged inserts into the main index."""
+        self.count = 0
+        self._synced = 0
+
+    # -------------------------------------------------------------- queries
+    def _device(self):
+        if self._dev is None:
+            self._dev = jnp.asarray(self._host)
+            self._synced = self.count
+        elif self._synced < self.count:
+            lo, hi = self._synced, self.count
+            b = hi - lo
+            bp = _bucket_size(b)
+            # pad by repeating the first new row (idempotent re-set)
+            slots = np.full((bp,), lo, np.int32)
+            slots[:b] = np.arange(lo, hi, dtype=np.int32)
+            self._dev = _append_rows(self._dev, jnp.asarray(slots),
+                                     jnp.asarray(self._host[slots]))
+            self._synced = hi
+        return self._dev
+
+    def snapshot(self) -> FreshSnapshot | None:
+        if self.count == 0:
+            return None
+        return FreshSnapshot(self._device(), self._ids[: self.count].copy(),
+                             self.count)
+
+
+def fresh_topk(snap: FreshSnapshot, queries, k: int,
+               metric: str = "sq_l2") -> tuple[np.ndarray, np.ndarray]:
+    """Exact top-k external ids + distances from the fresh tier.
+
+    Returns (ids, dists), both (B, k); -1 / +inf padding where the tier
+    holds fewer than k rows.
+    """
+    B = queries.shape[0]
+    kk = min(k, snap.vecs.shape[0])
+    pos, dd = _scan_topk(jnp.asarray(queries, jnp.float32), snap.vecs,
+                         jnp.int32(snap.count), k=kk, metric=metric)
+    pos, dd = np.asarray(pos), np.asarray(dd)
+    ok = np.isfinite(dd)
+    ids = np.where(ok, snap.ids[np.minimum(pos, snap.count - 1)], -1)
+    if kk < k:
+        ids = np.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1)
+        dd = np.pad(dd, ((0, 0), (0, k - kk)), constant_values=np.inf)
+    return ids.astype(np.int64), dd
+
+
+def merge_topk(main_ids, main_dists, fresh_ids, fresh_dists,
+               k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Merge two (B, *) candidate lists by distance into one (B, k) top-k.
+
+    Both inputs use -1 / +inf padding; the merge is a stable sort so main-
+    index candidates win distance ties (deterministic results).  Ids are
+    disjoint between tiers by construction: a pending insert's id is not in
+    the main index until the flush that also empties the fresh tier.
+    """
+    cat_ids = np.concatenate([main_ids, fresh_ids], axis=1)
+    cat_d = np.concatenate([main_dists, fresh_dists], axis=1)
+    order = np.argsort(cat_d, axis=1, kind="stable")[:, :k]
+    ids = np.take_along_axis(cat_ids, order, axis=1)
+    d = np.take_along_axis(cat_d, order, axis=1)
+    return np.where(np.isfinite(d), ids, -1), d

@@ -1,0 +1,117 @@
+"""Epoch-versioned snapshot scheduler: interleave update flushes with
+search micro-batches under a stated consistency model.
+
+The paper serializes updates and searches with page locks; DGAI decouples
+the two paths entirely.  Here the front-end pins every search micro-batch
+to one `StreamSnapshot` — an epoch number plus the engine's device-resident
+`EngineSnapshot` (main mirrors, tombstoned alive, fresh-tier buffer).
+
+Consistency model (documented in DESIGN.md):
+
+* **Epochs.**  `epoch` counts applied update batches.  A flush is the only
+  epoch transition; it quiesces the batcher first (every queued request
+  executes against the pre-flush snapshot), applies the batch, then bumps
+  the epoch and drops the cached snapshot.  A request submitted during
+  epoch e therefore executes against e or e+1 — never a torn mix: all
+  tickets of one micro-batch carry the same `epoch_executed`.
+* **Read-your-writes.**  Within an epoch, staged inserts/deletes are
+  visible to every micro-batch snapshotted after they were staged (the
+  snapshot cache keys on the engine's `staged_seq`, so a stage forces a
+  re-snapshot; the flushed graph state underneath is unchanged).
+* **No stale device handles.**  `EngineSnapshot`s hold device buffers that
+  the next flush's delta scatter donates away; quiescing before the flush
+  guarantees no micro-batch is in flight when that happens.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.engine import EngineSnapshot, StreamingEngine
+
+from .batcher import QueryBatcher, SearchTicket
+
+
+@dataclass
+class StreamSnapshot:
+    epoch: int
+    view: EngineSnapshot
+
+
+class EpochScheduler:
+    """Serving front-end: micro-batched searches over epoch snapshots."""
+
+    def __init__(self, engine: StreamingEngine, *, max_batch: int = 32,
+                 deadline_s: float = 2e-3, L: int = 120, W: int = 4):
+        self.engine = engine
+        self.epoch = 0
+        self.L, self.W = L, W
+        self._snap: StreamSnapshot | None = None
+        self._snap_seq = -1
+        self.batcher = QueryBatcher(self._execute, max_batch=max_batch,
+                                    deadline_s=deadline_s)
+        if (engine.on_flush_begin is not None
+                or engine.on_flush_end is not None):
+            raise RuntimeError(
+                "engine already has a stream front-end attached: a second "
+                "EpochScheduler would steal its quiesce/epoch hooks and "
+                "leave the first serving from torn snapshots")
+        engine.on_flush_begin = self._quiesce
+        engine.on_flush_end = self._advance_epoch
+
+    # -------------------------------------------------------------- updates
+    def insert(self, vec: np.ndarray, vid: int | None = None) -> int:
+        return self.engine.insert(vec, vid)
+
+    def delete(self, vid: int) -> None:
+        self.engine.delete(vid)
+
+    def flush_updates(self):
+        """Apply the staged batch as one epoch transition e -> e+1."""
+        return self.engine.flush()
+
+    # ------------------------------------------------------------- searches
+    def submit_search(self, query: np.ndarray, k: int = 10) -> SearchTicket:
+        t = self.batcher.submit(query, k)
+        t.epoch_submitted = self.epoch
+        return t
+
+    def poll(self) -> None:
+        """Flush micro-batches whose oldest request passed the deadline."""
+        self.batcher.poll()
+
+    def drain(self) -> None:
+        self.batcher.drain()
+
+    def search(self, queries: np.ndarray, k: int = 10) -> np.ndarray:
+        """Synchronous convenience: submit all rows, drain, stack results."""
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        tickets = [self.submit_search(q, k) for q in queries]
+        self.drain()
+        return np.stack([t.result for t in tickets])
+
+    # ------------------------------------------------------------ internals
+    def snapshot(self) -> StreamSnapshot:
+        """Current-epoch snapshot, re-pinned only when staged state moved."""
+        seq = self.engine.staged_seq
+        if self._snap is None or self._snap_seq != seq:
+            self._snap = StreamSnapshot(self.epoch, self.engine.snapshot())
+            self._snap_seq = seq
+        return self._snap
+
+    def _execute(self, queries, k, n_real):
+        snap = self.snapshot()
+        ids, dists = self.engine.search_snapshot(snap.view, queries,
+                                                 k=k, L=self.L, W=self.W,
+                                                 stats_rows=n_real)
+        return ids, dists, snap.epoch
+
+    def _quiesce(self) -> None:
+        # queued requests execute against the pre-flush snapshot (epoch e)
+        self.batcher.drain()
+
+    def _advance_epoch(self) -> None:
+        self.epoch += 1
+        self._snap = None           # device mirrors may be donated next sync
+        self._snap_seq = -1

@@ -1,0 +1,253 @@
+"""Streaming workload generators + the event-replay driver.
+
+Each generator yields a deterministic (seeded) stream of `StreamEvent`s —
+insert / delete / search / flush — modelling one serving scenario from the
+ROADMAP's deployment list:
+
+* ``sliding_window``   — log/feed retention: every update inserts the newest
+  vector and deletes the oldest, so the live set is a moving window.
+* ``rolling_refresh``  — the paper's Sec. 7.2 protocol: per round, delete a
+  random small batch, insert fresh vectors, flush; searches interleave both
+  before the flush (staged state visible) and after.
+* ``bursty_write``     — write bursts (staged, with mid-burst searches that
+  must see the staged state) alternating with read bursts.
+* ``read_heavy_rag``   — RAG serving: almost all searches, a trickle of
+  updates flushed every few writes.
+
+Generators only *stage* deletes against flushed ids (the engine rejects
+deleting a pending insert by design), so they track flushed/staged state
+themselves and emit explicit ``flush`` events.
+
+`run_events` replays a stream through an `EpochScheduler` and can collect
+exact ground truth for freshness-recall: it maintains the visible set
+(staged inserts appear immediately, staged deletes disappear immediately)
+and drains the batcher before every state-changing event so each ticket's
+ground truth matches the snapshot its micro-batch executed against.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class StreamEvent:
+    op: str                         # "insert" | "delete" | "search" | "flush"
+    vid: int = -1
+    vec: np.ndarray | None = None
+    query: np.ndarray | None = None
+    k: int = 10
+
+
+def _query_near(rng, live_vecs: dict, noise: float) -> np.ndarray:
+    vid = int(rng.choice(np.fromiter(live_vecs, np.int64)))
+    v = live_vecs[vid]
+    return (v + noise * rng.normal(size=v.shape)).astype(np.float32)
+
+
+def sliding_window_events(vectors: np.ndarray, n_base: int, *,
+                          seed: int = 0, k: int = 10, scale: float = 1.0,
+                          flush_every: int = 8, search_frac: float = 0.5,
+                          noise: float = 0.01):
+    rng = np.random.default_rng(seed)
+    n_events = int(160 * scale)
+    order = deque(range(n_base))            # flushed ids, oldest first
+    staged_ins: list[int] = []
+    live_vecs = {i: vectors[i] for i in range(n_base)}
+    next_id, cursor, n_upd = n_base, n_base, 0
+    for _ in range(n_events):
+        if rng.random() < search_frac:
+            yield StreamEvent("search", query=_query_near(rng, live_vecs,
+                                                          noise), k=k)
+            continue
+        vec = vectors[cursor % len(vectors)]
+        cursor += 1
+        yield StreamEvent("insert", vid=next_id, vec=vec)
+        staged_ins.append(next_id)
+        live_vecs[next_id] = vec
+        next_id += 1
+        if order:                           # retire the oldest flushed
+            old = order.popleft()
+            yield StreamEvent("delete", vid=old)
+            live_vecs.pop(old)
+        n_upd += 1
+        if n_upd % flush_every == 0:
+            yield StreamEvent("flush")
+            order.extend(staged_ins)
+            staged_ins.clear()
+    yield StreamEvent("flush")
+
+
+def rolling_refresh_events(vectors: np.ndarray, n_base: int, *,
+                           seed: int = 0, k: int = 10, scale: float = 1.0,
+                           batch_sz: int = 8, noise: float = 0.01):
+    rng = np.random.default_rng(seed)
+    n_rounds = max(2, int(5 * scale))
+    searches = max(2, int(10 * scale))
+    flushed = list(range(n_base))
+    live_vecs = {i: vectors[i] for i in range(n_base)}
+    next_id, cursor = n_base, n_base
+    for _ in range(n_rounds):
+        dels = rng.choice(len(flushed), size=min(batch_sz, len(flushed) - 1),
+                          replace=False)
+        for j in sorted(dels, reverse=True):
+            vid = flushed.pop(j)
+            yield StreamEvent("delete", vid=vid)
+            live_vecs.pop(vid)
+        staged = []
+        for _ in range(batch_sz):
+            vec = vectors[cursor % len(vectors)]
+            cursor += 1
+            yield StreamEvent("insert", vid=next_id, vec=vec)
+            live_vecs[next_id] = vec
+            staged.append(next_id)
+            next_id += 1
+        for _ in range(searches // 2):      # staged state must be visible
+            yield StreamEvent("search", query=_query_near(rng, live_vecs,
+                                                          noise), k=k)
+        yield StreamEvent("flush")
+        flushed.extend(staged)
+        for _ in range(searches - searches // 2):
+            yield StreamEvent("search", query=_query_near(rng, live_vecs,
+                                                          noise), k=k)
+
+
+def bursty_write_events(vectors: np.ndarray, n_base: int, *,
+                        seed: int = 0, k: int = 10, scale: float = 1.0,
+                        write_burst: int = 12, read_burst: int = 16,
+                        noise: float = 0.01):
+    rng = np.random.default_rng(seed)
+    n_bursts = max(2, int(4 * scale))
+    flushed = list(range(n_base))
+    live_vecs = {i: vectors[i] for i in range(n_base)}
+    next_id, cursor = n_base, n_base
+    for _ in range(n_bursts):
+        staged = []
+        for w in range(write_burst):
+            vec = vectors[cursor % len(vectors)]
+            cursor += 1
+            yield StreamEvent("insert", vid=next_id, vec=vec)
+            live_vecs[next_id] = vec
+            staged.append(next_id)
+            next_id += 1
+            if w % 3 == 2 and len(flushed) > 1:     # deletes ride along
+                vid = flushed.pop(int(rng.integers(len(flushed))))
+                yield StreamEvent("delete", vid=vid)
+                live_vecs.pop(vid)
+            if w % 4 == 3:      # mid-burst search sees the staged writes
+                yield StreamEvent("search",
+                                  query=_query_near(rng, live_vecs, noise),
+                                  k=k)
+        yield StreamEvent("flush")
+        flushed.extend(staged)
+        for _ in range(read_burst):
+            yield StreamEvent("search", query=_query_near(rng, live_vecs,
+                                                          noise), k=k)
+
+
+def rag_read_heavy_events(vectors: np.ndarray, n_base: int, *,
+                          seed: int = 0, k: int = 10, scale: float = 1.0,
+                          write_frac: float = 0.08, flush_every: int = 4,
+                          noise: float = 0.01):
+    rng = np.random.default_rng(seed)
+    n_events = int(150 * scale)
+    flushed = list(range(n_base))
+    staged: list[int] = []
+    live_vecs = {i: vectors[i] for i in range(n_base)}
+    next_id, cursor, n_writes = n_base, n_base, 0
+    for _ in range(n_events):
+        if rng.random() >= write_frac:
+            yield StreamEvent("search", query=_query_near(rng, live_vecs,
+                                                          noise), k=k)
+            continue
+        if rng.random() < 0.5 or len(flushed) < 2:
+            vec = vectors[cursor % len(vectors)]
+            cursor += 1
+            yield StreamEvent("insert", vid=next_id, vec=vec)
+            live_vecs[next_id] = vec
+            staged.append(next_id)
+            next_id += 1
+        else:
+            vid = flushed.pop(int(rng.integers(len(flushed))))
+            yield StreamEvent("delete", vid=vid)
+            live_vecs.pop(vid)
+        n_writes += 1
+        if n_writes % flush_every == 0:
+            yield StreamEvent("flush")
+            flushed.extend(staged)
+            staged.clear()
+    yield StreamEvent("flush")
+
+
+WORKLOADS = {
+    "sliding_window": sliding_window_events,
+    "rolling_refresh": rolling_refresh_events,
+    "bursty_write": bursty_write_events,
+    "read_heavy_rag": rag_read_heavy_events,
+}
+
+
+def run_events(frontend, events, *, collect_gt: bool = False):
+    """Replay an event stream through an `EpochScheduler`.
+
+    Returns (tickets, gts): one `SearchTicket` per search event; with
+    `collect_gt`, `gts[i]` is the exact brute-force top-k id array for
+    ticket i over the then-visible set (pending inserts included, pending
+    deletes excluded — the freshness-recall ground truth), else None.
+    """
+    from repro.core import brute_force_knn
+
+    idx = frontend.engine.index
+    visible = {vid: idx.vectors[slot].copy()
+               for vid, slot in idx._local_map.items()}
+    for vid, vec in frontend.engine.pending_inserts:
+        visible[vid] = np.asarray(vec, np.float32)
+    for vid in frontend.engine.pending_deletes:
+        visible.pop(vid, None)
+    tickets, gts = [], []
+    for ev in events:
+        if ev.op == "search":
+            t = frontend.submit_search(ev.query, ev.k)
+            tickets.append(t)
+            if collect_gt:
+                ids = np.fromiter(visible, np.int64)
+                vecs = np.stack([visible[int(i)] for i in ids])
+                kk = min(ev.k, len(ids))
+                gts.append(ids[brute_force_knn(vecs, ev.query[None],
+                                               kk)[0]])
+            else:
+                gts.append(None)
+                frontend.poll()
+            continue
+        # state-changing event: with ground-truth collection every pending
+        # ticket must execute against the pre-change snapshot it was
+        # scored for, so quiesce first (flush quiesces on its own)
+        if collect_gt and len(frontend.batcher):
+            frontend.drain()
+        if ev.op == "insert":
+            frontend.insert(ev.vec, ev.vid)
+            visible[ev.vid] = np.asarray(ev.vec, np.float32)
+        elif ev.op == "delete":
+            frontend.delete(ev.vid)
+            visible.pop(ev.vid, None)
+        elif ev.op == "flush":
+            frontend.flush_updates()
+        else:
+            raise ValueError(f"unknown event op {ev.op!r}")
+    frontend.drain()
+    return tickets, gts
+
+
+def freshness_recall(tickets, gts) -> float:
+    """Mean recall of search results vs the exact visible-set ground truth
+    (a pending insert missing from results, or a pending delete present,
+    costs recall — the paper's recall metric extended to staged state)."""
+    scores = []
+    for t, gt in zip(tickets, gts):
+        if gt is None or len(gt) == 0:
+            continue
+        got = set(int(i) for i in t.result if i >= 0)
+        scores.append(len(got & set(int(i) for i in gt)) / len(gt))
+    return float(np.mean(scores)) if scores else 0.0

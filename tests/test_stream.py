@@ -1,0 +1,347 @@
+"""Streaming front-end: freshness semantics (read-your-writes before any
+flush), fresh+main merged top-k vs brute force, epoch-snapshot consistency,
+query micro-batching, the entry-point fallback, and the benchmark smoke
+paths (acceptance criteria of the stream subsystem)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (StreamingEngine, brute_force_knn, build_vamana)
+from repro.core.index import IndexParams
+from repro.stream import EpochScheduler, QueryBatcher
+
+N, DIM = 300, 16
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def base():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(N, DIM)).astype(np.float32)
+    idx = build_vamana(vecs, params=IndexParams(dim=DIM, R=8, R_relaxed=9),
+                      L_build=32, max_c=40, seed=0)
+    return vecs, idx
+
+
+def _engine(idx, **kw):
+    kw.setdefault("engine", "greator")
+    kw.setdefault("batch_size", 10**9)
+    return StreamingEngine(idx.clone(), **kw)
+
+
+# ------------------------------------------------------- freshness semantics
+def test_insert_immediately_searchable(base):
+    """A just-inserted vector is returned by search before any flush."""
+    _, idx = base
+    eng = _engine(idx)
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=DIM).astype(np.float32) * 4   # far from the base set
+    vid = eng.insert(v)
+    assert eng.pending_inserts                         # nothing flushed
+    got = eng.search(v[None], k=5, L=64)[0]
+    assert got[0] == vid, f"pending insert not served first: {got}"
+    # and it survives the flush with identical visibility
+    eng.flush()
+    assert eng.search(v[None], k=5, L=64)[0][0] == vid
+
+
+def test_pending_delete_invisible(base):
+    """A just-deleted vector is not returned by search before the flush."""
+    vecs, idx = base
+    eng = _engine(idx)
+    q = vecs[11][None]
+    assert 11 in eng.search(q, k=5, L=64)[0]
+    eng.delete(11)
+    assert eng.pending_deletes                         # nothing flushed
+    assert 11 not in eng.search(q, k=10, L=64)[0]
+    eng.flush()
+    assert 11 not in eng.search(q, k=10, L=64)[0]
+
+
+def test_pending_delete_tombstoned_without_fresh_tier(base):
+    """Regression (satellite bugfix): the pending-delete tombstone mask
+    must reach the alive operand even with the fresh tier disabled."""
+    vecs, idx = base
+    eng = _engine(idx, fresh_tier=False)
+    assert eng.fresh is None
+    q = vecs[23][None]
+    assert 23 in eng.search(q, k=5, L=64)[0]
+    eng.delete(23)
+    got = eng.search(q, k=10, L=64)[0]
+    assert 23 not in got, "pending delete returned by search (no fresh tier)"
+
+
+def test_reinsert_after_pending_delete_serves_new_vector(base):
+    """delete(v) then insert() before flush: the new vector is served from
+    the fresh tier while the old one is tombstoned."""
+    vecs, idx = base
+    eng = _engine(idx)
+    eng.delete(42)
+    rng = np.random.default_rng(3)
+    v_new = rng.normal(size=DIM).astype(np.float32) * 4
+    vid_new = eng.insert(v_new)
+    got = eng.search(np.stack([vecs[42], v_new]), k=10, L=64)
+    assert 42 not in got[0] and 42 not in got[1]
+    assert got[1][0] == vid_new
+
+
+# ------------------------------------------------ merged top-k vs brute force
+def test_mixed_sequence_merged_topk_matches_bruteforce(base):
+    """Randomized insert/delete/search sequence: merged fresh+main top-k
+    must match exact brute force over the visible set (pending inserts
+    included, pending deletes excluded)."""
+    vecs, idx = base
+    eng = _engine(idx)
+    rng = np.random.default_rng(7)
+    visible = {i: vecs[i] for i in range(N)}
+    staged_ins, staged_del = [], set()
+    flushed = list(range(N))
+    next_id = N
+    k, recalls = 10, []
+    for step in range(120):
+        op = rng.random()
+        if op < 0.3:                                   # insert
+            v = rng.normal(size=DIM).astype(np.float32)
+            eng.insert(v, next_id)
+            visible[next_id] = v
+            staged_ins.append(next_id)
+            next_id += 1
+        elif op < 0.5 and len(flushed) > 20:           # delete (flushed id)
+            j = int(rng.integers(len(flushed)))
+            vid = flushed.pop(j)
+            eng.delete(vid)
+            visible.pop(vid)
+            staged_del.add(vid)
+        elif op < 0.6:                                 # flush
+            eng.flush()
+            flushed.extend(staged_ins)
+            staged_ins, staged_del = [], set()
+        else:                                          # search
+            vid = int(rng.choice(np.fromiter(visible, np.int64)))
+            q = (visible[vid]
+                 + 0.02 * rng.normal(size=DIM)).astype(np.float32)
+            ids = np.fromiter(visible, np.int64)
+            gt = ids[brute_force_knn(
+                np.stack([visible[int(i)] for i in ids]), q[None], k)[0]]
+            got = eng.search(q[None], k=k, L=160)[0]
+            # staged state must be exactly honored even if graph recall < 1
+            assert not (set(int(i) for i in got) & staged_del)
+            recalls.append(len(set(got.tolist()) & set(gt.tolist())) / k)
+    assert recalls, "sequence produced no searches"
+    assert np.mean(recalls) >= 0.95, f"mean recall {np.mean(recalls):.3f}"
+
+
+# ------------------------------------------------------- epochs + batching
+def test_epoch_snapshot_consistency(base):
+    """Requests submitted in epoch e execute against e or e+1, all tickets
+    of one micro-batch against the same epoch; a flush quiesces in-flight
+    requests before the epoch advances."""
+    vecs, idx = base
+    eng = _engine(idx)
+    sched = EpochScheduler(eng, max_batch=64, L=64)   # no auto-flush
+    rng = np.random.default_rng(5)
+    tickets = []
+    for round_ in range(4):
+        for _ in range(5):
+            q = vecs[rng.integers(N)] + 0.01 * rng.normal(size=DIM)
+            tickets.append(sched.submit_search(q.astype(np.float32), 5))
+        sched.insert(rng.normal(size=DIM).astype(np.float32))
+        sched.flush_updates()                          # e -> e+1
+    sched.drain()
+    assert sched.epoch == 4
+    by_epoch = {}
+    for t in tickets:
+        assert t.done
+        assert t.epoch_executed in (t.epoch_submitted,
+                                    t.epoch_submitted + 1)
+        by_epoch.setdefault(t.epoch_executed, 0)
+        # quiesce-before-flush: these tickets ran in their submit epoch
+        assert t.epoch_executed == t.epoch_submitted
+    assert len(by_epoch) == 4                          # one epoch per round
+
+
+def test_read_your_writes_through_scheduler(base):
+    """A search submitted after a staged insert (same epoch) sees it."""
+    _, idx = base
+    eng = _engine(idx)
+    sched = EpochScheduler(eng, max_batch=8, L=64)
+    v = np.full((DIM,), 3.0, np.float32)
+    vid = sched.insert(v)
+    t = sched.submit_search(v, 5)
+    sched.drain()
+    assert t.result[0] == vid and t.epoch_executed == 0
+
+
+def test_batcher_micro_batches_and_latency():
+    """max_batch-triggered flushes, bucket padding accounting, per-request
+    latency, and result routing back to the right ticket."""
+    calls = []
+
+    def execute(queries, k, n_real):
+        calls.append(queries.shape)
+        assert n_real <= queries.shape[0]
+        ids = np.tile(np.arange(k, dtype=np.int64), (queries.shape[0], 1))
+        ids[:, 0] = queries[:, 0].astype(np.int64)     # echo query tag
+        return ids, np.zeros((queries.shape[0], k), np.float32), 7
+
+    b = QueryBatcher(execute, max_batch=4, deadline_s=10.0)
+    tickets = [b.submit(np.full((3,), i, np.float32), 5) for i in range(6)]
+    assert calls == [(4, 3)]                 # 4-sized batch flushed itself
+    assert [t.done for t in tickets] == [True] * 4 + [False] * 2
+    b.drain()
+    assert calls == [(4, 3), (2, 3)]         # remainder bucket-padded: 2
+    for i, t in enumerate(tickets):
+        assert t.done and t.result[0] == i   # results matched to tickets
+        assert t.latency_s is not None and t.latency_s >= 0
+        assert t.epoch_executed == 7
+    assert b.stats.n_requests == 6 and b.stats.n_batches == 2
+    assert b.stats.latencies_s and len(b.stats.latencies_s) == 6
+
+
+def test_batcher_deadline_poll():
+    def execute(queries, k, n_real):
+        return (np.zeros((queries.shape[0], k), np.int64),
+                np.zeros((queries.shape[0], k), np.float32), 0)
+
+    b = QueryBatcher(execute, max_batch=100, deadline_s=0.0)
+    t = b.submit(np.zeros(4, np.float32), 3)
+    assert not t.done                        # queued, under max_batch
+    b.poll()                                 # deadline 0: already overdue
+    assert t.done
+
+
+def test_second_frontend_on_same_engine_rejected(base):
+    """Attaching two schedulers to one engine would let the second steal
+    the quiesce/epoch hooks out from under the first."""
+    _, idx = base
+    eng = _engine(idx)
+    EpochScheduler(eng, max_batch=8)
+    with pytest.raises(RuntimeError, match="already has a stream front-end"):
+        EpochScheduler(eng, max_batch=8)
+
+
+def test_batcher_padding_lanes_excluded_from_engine_stats(base):
+    """Bucket-padding lanes must not appear in engine-level SearchStats."""
+    vecs, idx = base
+    eng = _engine(idx)
+    sched = EpochScheduler(eng, max_batch=8, L=64)
+    eng.search_stats.latencies_s.clear()
+    for q in vecs[:5]:                       # pads to the 6-bucket
+        sched.submit_search(q, 5)
+    sched.drain()
+    assert len(eng.search_stats.latencies_s) == 5
+    assert sched.batcher.stats.padded_lanes == 1
+
+
+# ----------------------------------------------------------- staging guards
+def test_insert_duplicate_vid_raises(base):
+    vecs, idx = base
+    eng = _engine(idx)
+    with pytest.raises(KeyError, match="already live"):
+        eng.insert(vecs[0], 5)               # 5 is a live base vertex
+    vid = eng.insert(vecs[0] * 2)
+    with pytest.raises(KeyError, match="duplicate insert"):
+        eng.insert(vecs[0] * 3, vid)
+    # delete-then-reinsert of the same id within one batch is allowed:
+    # the tombstone hides the old vector, the fresh tier serves the new one
+    eng.delete(17)
+    eng.insert(vecs[17] * 1.5, 17)
+    eng.flush()
+    assert eng.index.slot_of(17) >= 0
+
+
+# --------------------------------------------------------- sharded frontend
+def test_sharded_search_includes_pending_inserts():
+    """Regression: the sharded fan-out merge used to recompute distances
+    from main-index slots, silently dropping fresh-tier candidates."""
+    from repro.data import synthetic_vectors
+    from repro.distributed.sharded_index import ShardedEngine, owner_of
+
+    vecs = synthetic_vectors(300, 16, n_clusters=8, seed=2)
+    eng = ShardedEngine(vecs, n_shards=3, R=8, L_build=24, max_c=32)
+    rng = np.random.default_rng(4)
+    v = rng.normal(size=16).astype(np.float32) * 4
+    vid = 300
+    eng.insert(v, vid)
+    shard = eng.shards[owner_of(vid, 3)]
+    assert shard.pending_inserts               # staged, not flushed
+    got = eng.search(v[None], k=5, L=48)[0]
+    assert got[0] == vid, got
+    eng.delete(3)                              # staged delete invisible too
+    assert 3 not in eng.search(vecs[3][None], k=10, L=48)[0]
+
+
+# ------------------------------------------------------ entry-point fallback
+def test_entry_fallback_nearest_and_cached(base):
+    """Deleting the entry vertex: the fallback picks the alive vertex
+    nearest the old entry (not an arbitrary slot) and caches the choice."""
+    vecs, idx = base
+    eng = _engine(idx)
+    entry = eng.index.entry_id
+    old_vec = eng.index.vectors[eng.index.slot_of(entry)].copy()
+    eng.delete(entry)
+    eng.flush()
+    eng.search(vecs[:2], k=5, L=64)          # triggers the fallback
+    new_entry = eng.index.entry_id
+    assert new_entry != entry
+    # expected: alive vertex nearest the old entry vector
+    alive = np.flatnonzero(eng.index.alive)
+    d = ((eng.index.vectors[alive] - old_vec) ** 2).sum(axis=1)
+    expect = int(eng.index._slot_owner[alive[int(np.argmin(d))]])
+    assert new_entry == expect
+    eng.search(vecs[:2], k=5, L=64)
+    assert eng.index.entry_id == new_entry   # cached, not recomputed
+
+
+# ----------------------------------------------------------- WAL durability
+def test_wal_replay_restores_fresh_tier(base, tmp_path):
+    """Staged (unflushed) inserts replayed from the WAL stay searchable."""
+    _, idx = base
+    wal = str(tmp_path / "wal")
+    eng = _engine(idx, wal_dir=wal)
+    v = np.full((DIM,), -3.0, np.float32)
+    vid = eng.insert(v)
+    # crash before flush; a new engine replays the WAL
+    eng2 = StreamingEngine(idx.clone(), engine="greator",
+                           batch_size=10**9, wal_dir=wal)
+    assert eng2.fresh is not None and len(eng2.fresh) == 1
+    assert eng2.search(v[None], k=5, L=64)[0][0] == vid
+
+
+# ------------------------------------------------------------ bench smoke
+@pytest.mark.slow
+def test_bench_stream_smoke_reports_and_batched_beats_sync():
+    """bench_stream --smoke end-to-end: reports throughput, p99, freshness
+    recall; batched front-end >= per-query sync on an 8-way workload."""
+    from benchmarks.bench_stream import run_stream_bench
+    rep = run_stream_bench(smoke=True)
+    assert set(rep["workloads"]) == {"sliding_window", "rolling_refresh",
+                                     "bursty_write", "read_heavy_rag"}
+    for name, r in rep["workloads"].items():
+        assert r["search_qps"] > 0 and r["p99_ms"] >= r["p50_ms"] >= 0
+        assert r["freshness_recall"] >= 0.9, (name, r)
+    fe = rep["front_end"]
+    assert fe["fanout"] >= 8
+    assert fe["batched_qps"] >= fe["sync_qps"], fe
+
+
+@pytest.mark.slow
+def test_benchmarks_run_smoke_subprocess():
+    """`python -m benchmarks.run --smoke` (satellite: CI for all suites):
+    every emitted row must be well-formed and ERROR-free."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--smoke"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=3000)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rows = [ln for ln in out.stdout.splitlines()
+            if ln and not ln.startswith(("#", "name,"))]
+    assert rows, out.stdout[-2000:]
+    bad = [r for r in rows if "ERROR" in r]
+    assert not bad, bad
+    assert any(r.startswith("stream/") for r in rows), rows[-5:]
